@@ -1,0 +1,135 @@
+"""Fig. 5 + Table I analogue: per-layer (I,F) training vs full precision.
+
+Trains the paper's LeNet-class 5-layer network (as an MLP classifier, built
+directly on the TaxoNN engine primitives forward_stack/backward_stack) on
+the synthetic classification set, with:
+  * fp32 (quantization off)
+  * the paper's Table-I per-layer schedules (mnist / cifar10 / svhn points)
+  * a deliberately-too-coarse schedule (the paper's under-fitting regime)
+
+and a reduced LM (qwen-family twin) fp32-vs-quantized run.  Reports final
+accuracy / loss deltas — the claim under test is Table I's ~1% gap.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lenet5 import CONFIG as LENET
+from repro.core.taxonn import QuantPolicy, backward_stack, forward_stack
+from repro.data import SyntheticClassificationDataset
+from repro.optim import Hyper, OptimizerConfig, apply_update, init_opt_state
+from repro.quant import make_bit_schedule, paper_schedule
+
+
+def init_mlp(key, d_in, d_h, d_out, n_hidden):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": jax.random.normal(ks[0], (d_in, d_h), jnp.float32) * d_in ** -0.5,
+        "hidden": jax.random.normal(
+            ks[1], (n_hidden, d_h, d_h), jnp.float32) * d_h ** -0.5,
+        "w_out": jax.random.normal(ks[2], (d_h, d_out), jnp.float32) * d_h ** -0.5,
+    }
+
+
+def make_mlp_step(policy: QuantPolicy, ocfg: OptimizerConfig):
+    def body(w, shared, x, b_l):
+        return jax.nn.relu(x @ w), jnp.float32(0.0)
+
+    def step(params, opt, batch, hyper, bits):
+        x, y = batch
+
+        def in_f(w):
+            return jax.nn.relu(x @ w)
+        h0, in_vjp = jax.vjp(in_f, params["w_in"])
+
+        h_final, caches, _ = forward_stack(body, params["hidden"], (),
+                                           h0, bits, policy)
+
+        def head_f(w, h):
+            logits = h @ w
+            ls = jax.nn.log_softmax(logits)
+            loss = -jnp.mean(jnp.take_along_axis(ls, y[:, None], 1))
+            return loss, logits
+        loss, head_vjp, logits = jax.vjp(head_f, params["w_out"], h_final,
+                                         has_aux=True)
+        d_wout, G = head_vjp(jnp.float32(policy.grad_scale))
+
+        G0, new_hidden, new_opt_h, _, _ = backward_stack(
+            body, params["hidden"], (), opt["hidden"], caches, bits, G,
+            hyper, policy, ocfg, 0.0)
+
+        (d_win,) = in_vjp(G0)
+        inv = 1.0 / policy.grad_scale
+        new_win, new_opt_in = apply_update(
+            params["w_in"], d_win * inv, opt["w_in"], hyper, ocfg)
+        new_wout, new_opt_out = apply_update(
+            params["w_out"], jax.tree.map(lambda g: g * inv, d_wout),
+            opt["w_out"], hyper, ocfg)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return ({"w_in": new_win, "hidden": new_hidden, "w_out": new_wout},
+                {"w_in": new_opt_in, "hidden": new_opt_h, "w_out": new_opt_out},
+                loss, acc)
+    return step
+
+
+def eval_acc(params, x, y):
+    h = jax.nn.relu(x @ params["w_in"])
+    for i in range(params["hidden"].shape[0]):
+        h = jax.nn.relu(h @ params["hidden"][i])
+    return float(jnp.mean(jnp.argmax(h @ params["w_out"], -1) == y))
+
+
+def run_mlp(schedule_name: str, bits, enabled: bool, steps=400, lr=0.05,
+            seed=0):
+    ds = SyntheticClassificationDataset(
+        input_dim=LENET.input_dim, num_classes=LENET.num_classes,
+        n_train=8192, n_test=2048, noise=3.5)
+    n_hidden = LENET.num_layers - 2
+    params = init_mlp(jax.random.key(seed), LENET.input_dim, LENET.hidden,
+                      LENET.num_classes, n_hidden)
+    ocfg = OptimizerConfig(kind="sgd")
+    policy = (QuantPolicy(grad_scale=64.0) if enabled else QuantPolicy.off())
+    opt = {k: init_opt_state(v, ocfg) for k, v in params.items()}
+    step = jax.jit(make_mlp_step(policy, ocfg))
+    t0 = time.time()
+    losses = []
+    for i, (xb, yb) in enumerate(ds.train_batches(128, steps, seed)):
+        hyper = Hyper(lr=jnp.float32(lr), step=jnp.int32(i))
+        params, opt, loss, acc = step(params, opt,
+                                      (jnp.asarray(xb), jnp.asarray(yb)),
+                                      hyper, bits)
+        losses.append(float(loss))
+    test_acc = eval_acc(params, jnp.asarray(ds.test[0]), jnp.asarray(ds.test[1]))
+    us = (time.time() - t0) / max(len(losses), 1) * 1e6
+    return {
+        "name": f"convergence/lenet5_{schedule_name}",
+        "us_per_call": us,
+        "loss_first": float(np.mean(losses[:20])),
+        "loss_last": float(np.mean(losses[-20:])),
+        "test_acc": test_acc,
+    }
+
+
+def run(quick: bool = False):
+    steps = 150 if quick else 400
+    n_hidden = LENET.num_layers - 2
+    rows = []
+    fp32 = run_mlp("fp32", make_bit_schedule(n_hidden, enabled=False),
+                   enabled=False, steps=steps)
+    rows.append(fp32)
+    for name in ("mnist", "cifar10", "svhn"):
+        sched = paper_schedule(name, n_hidden)
+        r = run_mlp(f"tableI_{name}", sched, enabled=True, steps=steps)
+        r["acc_gap_vs_fp32"] = fp32["test_acc"] - r["test_acc"]
+        rows.append(r)
+    # the paper's under-fitting regime: far too few fractional bits
+    coarse = make_bit_schedule(n_hidden, weight=(1, 3), act=(2, 3),
+                               grad=(1, 3), ramp=False)
+    r = run_mlp("underfit_1_3", coarse, enabled=True, steps=steps)
+    r["acc_gap_vs_fp32"] = fp32["test_acc"] - r["test_acc"]
+    rows.append(r)
+    return rows

@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: us_per_call of the three TaxoNN Pallas kernels
+(interpret mode on CPU — structural check; Mosaic-compiled on TPU) against
+their XLA-fused jnp references."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import bp_gstep_op, fxp_matmul_op, sgd_dw_update_op
+
+
+def _timeit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    m = 128 if quick else 256
+    x = jax.random.normal(jax.random.key(0), (m, m))
+    w = jax.random.normal(jax.random.key(1), (m, m))
+    g = jax.random.normal(jax.random.key(2), (m, m)) * 0.1
+    z = jax.random.normal(jax.random.key(3), (m, m))
+
+    jref_mm = jax.jit(lambda a, b: ref.fxp_matmul_ref(a, b))
+    jref_g = jax.jit(lambda a, b, c: ref.bp_gstep_ref(a, b, c))
+    jref_u = jax.jit(lambda a, b, c: ref.sgd_dw_update_ref(a, b, c, 0.01))
+
+    return [{
+        "name": "kernels/fxp_matmul",
+        "us_per_call": _timeit(fxp_matmul_op, x, w),
+        "ref_us": _timeit(jref_mm, x, w),
+        "shape": f"{m}x{m}x{m}",
+        "note": "interpret-mode on CPU; Mosaic on TPU",
+    }, {
+        "name": "kernels/bp_gstep",
+        "us_per_call": _timeit(bp_gstep_op, g, w, z),
+        "ref_us": _timeit(jref_g, g, w, z),
+        "shape": f"{m}x{m}x{m}",
+    }, {
+        "name": "kernels/sgd_dw_update",
+        "us_per_call": _timeit(lambda a, b, c: sgd_dw_update_op(a, b, c, 0.01),
+                               x, g, w),
+        "ref_us": _timeit(jref_u, x, g, w),
+        "shape": f"{m}x{m}x{m}",
+    }]

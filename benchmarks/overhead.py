@@ -1,0 +1,94 @@
+"""Tables II/III analogue: the cost of ADDING TRAINING to inference.
+
+TaxoNN's claim: training support costs ~9.5% area / ~6.4% power over the
+inference-only baseline PE.  The TPU-native analogues are per-step resource
+ratios between the TaxoNN train step and the forward (inference) pass, from
+compiled artifacts on a reduced config with every scan unrolled (exact
+counts):
+
+  * FLOPs ratio        (Table II analogue: compute-resource overhead)
+  * HBM bytes ratio    (Table III analogue: data-movement/energy overhead)
+
+The paper's separate claim that BP cycles ~= feed-forward cycles maps to
+the FLOPs ratio of backward-only vs forward.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig
+from repro.util.scan import unrolled_scans_ctx
+from repro.models.config import ModelConfig
+
+
+def _cfg():
+    return ModelConfig(
+        name="bench-dense", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=2048,
+        compute_dtype="float32", logit_chunk=256)
+
+
+def _cost(fn, *args):
+    with unrolled_scans_ctx():
+        compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))
+
+
+def run(quick: bool = False):
+    cfg = _cfg()
+    params = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    b, t = 8, 256
+    batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+
+    t0 = time.time()
+    fwd_flops, fwd_bytes = _cost(
+        lambda p, bt: lm.forward_hidden(p, cfg, bt), params, batch)
+
+    ocfg = OptimizerConfig(kind="sgd")
+    step = make_train_step(cfg, QuantPolicy(grad_scale=64.0), ocfg)
+    opt = jax.eval_shape(lambda p: init_train_state(p, ocfg), params)
+    bits = default_bits(cfg, enabled=True)
+    hyper = jax.eval_shape(lambda: Hyper(lr=jnp.float32(1e-2),
+                                         step=jnp.int32(0)))
+    bits_s = jax.eval_shape(lambda: bits)
+    train_flops, train_bytes = _cost(step, params, opt, batch, hyper, bits_s)
+
+    # fp32 train step (no quantization ops) — isolates the (I,F) emulation cost
+    step_fp = make_train_step(cfg, QuantPolicy.off(), ocfg)
+    fp_flops, fp_bytes = _cost(step_fp, params, opt, batch, hyper, bits_s)
+
+    us = (time.time() - t0) * 1e6 / 3
+    return [{
+        "name": "overhead/train_vs_inference_flops",
+        "us_per_call": us,
+        "inference_flops": fwd_flops,
+        "train_flops": train_flops,
+        "ratio": train_flops / fwd_flops,
+        # paper: BP cycle count ~ feed-forward cycle count (with remat the
+        # engine's backward = fwd recompute + 2x backward matmuls)
+        "backward_over_forward": (train_flops - fwd_flops) / fwd_flops,
+    }, {
+        "name": "overhead/train_vs_inference_bytes",
+        "us_per_call": us,
+        "inference_bytes": fwd_bytes,
+        "train_bytes": train_bytes,
+        "ratio": train_bytes / fwd_bytes,
+    }, {
+        "name": "overhead/quant_emulation_cost",
+        "us_per_call": us,
+        "train_flops_fp32": fp_flops,
+        "train_flops_quant": train_flops,
+        "flops_overhead": (train_flops - fp_flops) / fp_flops,
+        "bytes_overhead": (train_bytes - fp_bytes) / fp_bytes,
+    }]

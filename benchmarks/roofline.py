@@ -1,0 +1,51 @@
+"""Roofline summary table from the dry-run records (results/dryrun/*.json).
+
+Not a compile pass itself — renders EXPERIMENTS.md §Roofline from the
+records produced by ``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+
+def load_records(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(f"{out_dir}/*.json")):
+        recs.append(json.loads(pathlib.Path(f).read_text()))
+    return recs
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    # append §Perf optimized records when present (tagged by their opts)
+    for r in load_records("results/perf"):
+        if r.get("opts"):
+            r = dict(r)
+            r["arch"] = f"{r['arch']}+{'+'.join(r['opts'])}"
+            recs.append(r)
+    rows = []
+    for r in recs:
+        if r.get("mesh") != "pod_16x16":   # roofline table is single-pod
+            continue
+        if r["status"] != "ok":
+            rows.append({
+                "name": f"roofline/{r['arch']}__{r['cell']}",
+                "us_per_call": 0.0,
+                "status": r["status"],
+                "reason": r.get("reason", r.get("error", ""))[:80],
+            })
+            continue
+        t = r["cost"]["terms"]
+        rows.append({
+            "name": f"roofline/{r['arch']}__{r['cell']}",
+            "us_per_call": t["step_time_lower_bound_s"] * 1e6,
+            "status": "ok",
+            "compute_ms": round(t["compute_s"] * 1e3, 2),
+            "memory_ms": round(t["memory_s"] * 1e3, 2),
+            "collective_ms": round(t["collective_s"] * 1e3, 2),
+            "dominant": t["dominant"],
+            "useful_flops_ratio": round(r.get("useful_flops_ratio") or 0, 3),
+        })
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV (derived = key=value pairs).
+  convergence — Fig. 5 / Table I   (per-layer (I,F) vs fp32 accuracy)
+  overhead    — Tables II/III     (train-support cost over inference)
+  savings     — Table IV          (low-bitwidth savings vs full precision)
+  pipeline    — Fig. 3            (fused per-layer BP vs monolithic)
+  kernels     — PE datapath       (Pallas kernel microbenches)
+  roofline    — (beyond paper)    (dry-run roofline summary)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (convergence, kernels_bench, overhead, pipeline,
+                            roofline, savings)
+    suites = {
+        "convergence": convergence.run,
+        "overhead": overhead.run,
+        "savings": savings.run,
+        "pipeline": pipeline.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            failures += 1
+            continue
+        for r in rows:
+            derived = ";".join(
+                f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in r.items() if k not in ("name", "us_per_call"))
+            print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

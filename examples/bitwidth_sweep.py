@@ -1,0 +1,32 @@
+"""Per-layer bitwidth design-point sweep (the paper's Fig. 5 methodology).
+
+    PYTHONPATH=src python examples/bitwidth_sweep.py
+
+Sweeps fractional bits F for the paper's 5-layer network and prints the
+accuracy frontier — reproducing the paper's observation that there is a
+sharp lower bitwidth threshold below which training under-fits, while
+anything above it matches full precision.  Because bit schedules are
+runtime data, the sweep reuses ONE compiled train step.
+"""
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.*
+
+from benchmarks.convergence import run_mlp  # noqa: E402
+from repro.quant import make_bit_schedule  # noqa: E402
+
+STEPS = 200
+
+print(f"{'format':>12s} {'test_acc':>9s} {'final_loss':>11s}")
+fp32 = run_mlp("fp32", make_bit_schedule(3, enabled=False), enabled=False,
+               steps=STEPS)
+print(f"{'fp32':>12s} {fp32['test_acc']:9.4f} {fp32['loss_last']:11.4f}")
+
+for f_bits in (12, 10, 8, 6, 5, 4, 3):
+    sched = make_bit_schedule(3, weight=(2, f_bits), act=(4, f_bits),
+                              grad=(2, f_bits), ramp=False)
+    r = run_mlp(f"(2,{f_bits})", sched, enabled=True, steps=STEPS)
+    marker = "  <- under-fitting threshold" if \
+        r["test_acc"] < fp32["test_acc"] - 0.05 else ""
+    print(f"{f'(2,{f_bits})':>12s} {r['test_acc']:9.4f} "
+          f"{r['loss_last']:11.4f}{marker}")

@@ -1,0 +1,12 @@
+"""Serving example: continuous batching over the slot scheduler.
+
+    PYTHONPATH=src python examples/serve_batch.py
+
+Runs a reduced mixtral (MoE decode path with ring-buffer SWA caches)
+through the production serving driver: 12 requests over 4 decode slots.
+"""
+from repro.launch import serve
+
+serve.main(["--arch", "mixtral-8x7b", "--reduced", "--slots", "4",
+            "--requests", "12", "--prompt-len", "10", "--max-new", "12",
+            "--max-len", "48"])

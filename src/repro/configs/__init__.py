@@ -1,0 +1,99 @@
+"""Architecture registry + input specs for every (arch x shape) cell.
+
+``get_config(name)`` returns the exact assigned ModelConfig;
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that cell lowers (train_step / prefill / serve_step) —
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import (
+    ModelConfig, ShapeCell, SHAPE_CELLS, SHAPES_BY_NAME, cell_is_applicable,
+)
+
+ARCH_MODULES: Dict[str, str] = {
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "gemma-7b": "gemma_7b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "yi-34b": "yi_34b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-370m": "mamba2_370m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+ARCH_NAMES = tuple(ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def param_specs(cfg: ModelConfig):
+    """Abstract parameter shapes (no allocation)."""
+    from repro.models import lm
+    return jax.eval_shape(
+        lambda k: lm.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, cell_name: str) -> dict:
+    """Model-input stand-ins for the given shape cell.
+
+    train  -> {tokens, labels, (frames|patch_embeds)}
+    prefill-> {tokens, (frames|patch_embeds)}
+    decode -> {tokens [B,1], state: full decode-cache pytree specs}
+    """
+    cell = SHAPES_BY_NAME[cell_name]
+    if not cell_is_applicable(cfg, cell):
+        raise ValueError(
+            f"{cfg.name} x {cell_name}: long-context decode needs "
+            "sub-quadratic attention (SSM/hybrid only) — skipped by design")
+    b, t = cell.global_batch, cell.seq_len
+
+    def text_extras(tlen):
+        batch = {}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model),
+                                         jnp.float32)
+            tlen = tlen - cfg.num_patches  # total context = seq_len
+        return batch, tlen
+
+    if cell.kind == "train":
+        extras, tl = text_extras(t)
+        return {"tokens": _sds((b, tl), jnp.int32),
+                "labels": _sds((b, tl), jnp.int32), **extras}
+
+    if cell.kind == "prefill":
+        extras, tl = text_extras(t)
+        return {"tokens": _sds((b, tl), jnp.int32), **extras}
+
+    if cell.kind == "decode":
+        from repro.serving import init_decode_state
+        state = jax.eval_shape(
+            lambda: init_decode_state(cfg, b, t, jnp.bfloat16))
+        return {"tokens": _sds((b, 1), jnp.int32), "state": state}
+
+    raise ValueError(cell.kind)
+
+
+__all__ = [
+    "ARCH_MODULES", "ARCH_NAMES", "get_config", "param_specs", "input_specs",
+    "ModelConfig", "ShapeCell", "SHAPE_CELLS", "SHAPES_BY_NAME",
+    "cell_is_applicable",
+]

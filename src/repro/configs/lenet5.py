@@ -1,0 +1,21 @@
+"""The paper's own evaluation network: LeNet-class 5-layer model used for
+the MNIST / CIFAR10 / SVHN experiments (Fig. 5, Table I).
+
+We reproduce it as a 5-layer MLP classifier driven by the same TaxoNN engine
+primitives (forward_stack / backward_stack) — see benchmarks/convergence.py.
+The per-layer (I,F) design points from Table I are in
+``repro.quant.fixed_point.paper_schedule``.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNetConfig:
+    name: str = "lenet5"
+    input_dim: int = 784          # 28x28 (MNIST/SVHN); 1024*3 for CIFAR10
+    hidden: int = 256
+    num_layers: int = 5
+    num_classes: int = 10
+
+
+CONFIG = LeNetConfig()

@@ -1,0 +1,14 @@
+# The paper's primary contribution: the TaxoNN unrolled-SGD manual-BP engine
+# with per-layer fused updates and per-layer (I,F) quantization.
+from repro.core.taxonn import (
+    QuantPolicy,
+    default_bits_for,
+    forward_stack,
+    backward_stack,
+)
+from repro.core.steps import make_train_step, make_eval_step
+
+__all__ = [
+    "QuantPolicy", "default_bits_for", "forward_stack", "backward_stack",
+    "make_train_step", "make_eval_step",
+]

@@ -1,0 +1,324 @@
+"""Train/eval step builders: the TaxoNN engine vs the autodiff baseline.
+
+``make_train_step(cfg, policy, optim_cfg, engine)`` returns a jit-able
+
+    step(params, opt_state, batch, hyper, bits) -> (params, opt_state, metrics)
+
+engine="taxonn"   — the paper's unrolled G-chain with per-layer fused update
+engine="autodiff" — monolithic jax.grad + global optimizer apply (the
+                    "conventional accelerator" baseline the paper compares
+                    against; also the correctness oracle for the engine)
+
+``bits`` is a dict of runtime BitSchedules keyed by stack name ("blocks",
+and "enc_blocks" for encdec).  One compiled step serves every schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.taxonn import (
+    QuantPolicy,
+    backward_stack,
+    default_bits_for,
+    forward_stack,
+    quantize_weight_tree,
+)
+from repro.quant.fixed_point import quantize_ste
+from repro.util.scan import xscan
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import Hyper, OptimizerConfig, apply_update, init_opt_state
+
+Array = jax.Array
+
+AUX_COEF = lm.AUX_COEF
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+STACK_KEYS = ("blocks", "enc_blocks")
+SHARED_KEYS = ("shared_attn",)
+
+
+def boundary_keys(params: dict):
+    return tuple(k for k in params
+                 if k not in STACK_KEYS and k not in SHARED_KEYS)
+
+
+def init_train_state(params: dict, optim_cfg: OptimizerConfig) -> dict:
+    """Optimizer state mirrored on the params' top-level grouping so the
+    engine can scan per-layer slices of each stack's state."""
+    return {k: init_opt_state(v, optim_cfg) for k, v in params.items()}
+
+
+def default_bits(cfg: ModelConfig, enabled: bool = True) -> dict:
+    n = num_scan_units(cfg)
+    bits = {"blocks": default_bits_for(n, enabled)}
+    if cfg.family == "encdec":
+        bits["enc_blocks"] = default_bits_for(cfg.num_encoder_layers, enabled)
+    return bits
+
+
+def num_scan_units(cfg: ModelConfig) -> int:
+    """Engine-visible layers in the main stack (hybrid scans groups)."""
+    if cfg.family == "hybrid":
+        return lm.hybrid_groups(cfg)[0]
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Per-family stack bodies: body(params_slice, shared, x, bits_l) -> (y, aux)
+# ---------------------------------------------------------------------------
+
+def _make_body(cfg: ModelConfig, positions, enc_out_in_shared: bool = False):
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(p, shared, x, b_l):
+            return B.transformer_block(p, x, cfg, positions)
+        return body
+
+    if fam == "ssm":
+        def body(p, shared, x, b_l):
+            return B.mamba_block(p, x, cfg, positions)
+        return body
+
+    if fam == "hybrid":
+        def body(gp, shared, x, b_l):
+            h, _ = B.transformer_block(shared, x, cfg, positions)
+
+            @jax.checkpoint
+            def inner(hh, p):
+                h2, aux = B.mamba_block(p, hh, cfg, positions)
+                return h2, aux
+            h, auxs = xscan(inner, h, gp)
+            return h, jnp.sum(auxs)
+        return body
+
+    if fam == "encdec":
+        def body(p, shared, x, b_l):
+            (enc_out,) = shared
+            return B.decoder_block(p, x, cfg, positions, enc_out)
+        return body
+
+    raise ValueError(fam)
+
+
+def _enc_body(cfg: ModelConfig, positions):
+    def body(p, shared, x, b_l):
+        return B.transformer_block(p, x, cfg, positions, causal=False)
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Boundary (embed / head) functions
+# ---------------------------------------------------------------------------
+
+def _embed_fn(cfg: ModelConfig, batch, policy: QuantPolicy, bits0):
+    """x0 from the boundary params; quantized with the first layer's format."""
+    def f(bnd):
+        emb = bnd["embed"]
+        if policy.quantize_weights:
+            emb = quantize_weight_tree(emb, bits0["w_i"], bits0["w_f"],
+                                       bits0["enabled"], True)
+        p = {"embed": emb}
+        if cfg.family == "vlm":
+            p["mm_proj"] = bnd["mm_proj"]
+        x0, _ = lm.embed_input(p, cfg, batch)
+        return x0
+    return f
+
+
+def _head_fn(cfg: ModelConfig, batch, policy: QuantPolicy, bits_last,
+             grad_scale: float):
+    np_off = batch["patch_embeds"].shape[1] if cfg.family == "vlm" else 0
+
+    def f(bnd, xf):
+        x = L.apply_norm(bnd["final_norm"], xf, cfg)
+        if np_off:
+            x = x[:, np_off:, :]
+        w = bnd["embed"].T if cfg.tie_embeddings else bnd["lm_head"]
+        if policy.quantize_weights:
+            w = quantize_weight_tree(w, bits_last["w_i"], bits_last["w_f"],
+                                     bits_last["enabled"], True)
+        loss, metrics = lm.ce_from_weight(w, cfg, x, batch["labels"])
+        return loss, metrics
+    return f
+
+
+def _bits_edge(bits, idx):
+    return {"w_i": bits.w_i[idx], "w_f": bits.w_f[idx],
+            "a_i": bits.a_i[idx], "a_f": bits.a_f[idx],
+            "g_i": bits.g_i[idx], "g_f": bits.g_f[idx],
+            "enabled": bits.enabled}
+
+
+# ---------------------------------------------------------------------------
+# The TaxoNN train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
+                    optim_cfg: Optional[OptimizerConfig] = None,
+                    engine: str = "taxonn"):
+    policy = policy or QuantPolicy.off()
+    optim_cfg = optim_cfg or OptimizerConfig()
+
+    if engine == "autodiff":
+        def auto_step(params, opt_state, batch, hyper: Hyper, bits=None):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
+            gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads))
+            new_params, new_opt = {}, {}
+            for k in params:  # grouped like the engine's state layout
+                new_params[k], new_opt[k] = apply_update(
+                    params[k], grads[k], opt_state[k], hyper, optim_cfg)
+            metrics["grad_norm"] = jnp.sqrt(gsq)
+            return new_params, new_opt, metrics
+        return auto_step
+
+    if engine != "taxonn":
+        raise ValueError(engine)
+
+    fam = cfg.family
+    scale = policy.grad_scale
+
+    def step(params, opt_state, batch, hyper: Hyper, bits: dict,
+             rng: Optional[Array] = None):
+        main_bits = bits["blocks"]
+        bnd_keys = boundary_keys(params)
+        bnd = {k: params[k] for k in bnd_keys}
+
+        tokens = batch["tokens"]
+        bsz, tlen = tokens.shape
+        total_t = tlen + (batch["patch_embeds"].shape[1]
+                          if fam == "vlm" else 0)
+        positions = jnp.broadcast_to(jnp.arange(total_t), (bsz, total_t))
+
+        # ---- encoder forward (encdec only) ------------------------------
+        enc_caches = enc_out = enc_pos = None
+        enc_vjp = None
+        if fam == "encdec":
+            dt = lm.compute_dtype(cfg)
+            frames = batch["frames"].astype(dt)
+            enc_x0 = frames + lm._sinusoid(frames.shape[1], cfg.d_model).astype(dt)
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(frames.shape[1]), (bsz, frames.shape[1]))
+            e_last, enc_caches, _ = forward_stack(
+                _enc_body(cfg, enc_pos), params["enc_blocks"], (),
+                enc_x0, bits["enc_blocks"], policy)
+            enc_out, enc_vjp = jax.vjp(
+                lambda en, xx: L.apply_norm(en, xx, cfg),
+                bnd["enc_norm"], e_last)
+
+        # ---- embed (with VJP for the input-side embedding gradient) -----
+        embed_f = _embed_fn(cfg, batch, policy, _bits_edge(main_bits, 0))
+        x0, embed_vjp = jax.vjp(embed_f, bnd)
+
+        # ---- main stack forward, caching quantized X_i -------------------
+        # hybrid: shared = the weight-tied attn block (quantized per layer)
+        # encdec: shared = encoder output ACTIVATION (quantized once here)
+        quantize_shared = fam == "hybrid"
+        shared = (params["shared_attn"],) if fam == "hybrid" else ()
+        if fam == "encdec":
+            if policy.quantize_acts:
+                eb = _bits_edge(bits["enc_blocks"], -1)
+                enc_q = (eb["enabled"] * quantize_ste(
+                    enc_out.astype(jnp.float32), eb["a_i"], eb["a_f"])
+                    + (1.0 - eb["enabled"]) * enc_out.astype(jnp.float32)
+                ).astype(enc_out.dtype)
+            else:
+                enc_q = enc_out
+            shared = (enc_q,)
+        body = _make_body(cfg, positions)
+
+        def body_sh(p, sh, x, b_l):
+            if fam == "hybrid":
+                return body(p, sh[0], x, b_l)
+            return body(p, sh, x, b_l)
+
+        x_final, caches, aux_sum = forward_stack(
+            body_sh, params["blocks"], shared, x0, main_bits, policy,
+            quantize_shared=quantize_shared)
+
+        # ---- head (loss) --------------------------------------------------
+        head_f = _head_fn(cfg, batch, policy, _bits_edge(main_bits, -1), scale)
+        loss, head_vjp, metrics = jax.vjp(head_f, bnd, x_final, has_aux=True)
+        d_bnd_head, G_final = head_vjp(jnp.asarray(scale, jnp.float32))
+        metrics["aux"] = aux_sum
+        metrics["loss_total"] = loss + AUX_COEF * aux_sum
+
+        # ---- the G-chain: reverse scan with fused per-layer updates ------
+        G_in, new_blocks, new_blocks_opt, dshared, gsq = backward_stack(
+            body_sh, params["blocks"], shared, opt_state["blocks"], caches,
+            main_bits, G_final, hyper, policy, optim_cfg, AUX_COEF,
+            base_key=rng, quantize_shared=quantize_shared)
+
+        new_params = dict(params)
+        new_opt = dict(opt_state)
+        new_params["blocks"] = new_blocks
+        new_opt["blocks"] = new_blocks_opt
+
+        # ---- shared-attn update (hybrid) ---------------------------------
+        if fam == "hybrid":
+            d_shared_params = jax.tree.map(lambda g: g / scale, dshared[0])
+            new_params["shared_attn"], new_opt["shared_attn"] = apply_update(
+                params["shared_attn"], d_shared_params,
+                opt_state["shared_attn"], hyper, optim_cfg)
+            gsq = gsq + sum(jnp.sum(jnp.square(g))
+                            for g in jax.tree.leaves(d_shared_params))
+
+        # ---- encoder backward (encdec) ------------------------------------
+        d_bnd_enc = None
+        if fam == "encdec":
+            (d_enc_out,) = dshared  # accumulated over decoder layers (SCALED)
+            d_enc_norm, d_e_last = enc_vjp(d_enc_out.astype(enc_out.dtype))
+            _, new_enc, new_enc_opt, _, gsq_e = backward_stack(
+                _enc_body(cfg, enc_pos), params["enc_blocks"], (),
+                opt_state["enc_blocks"], enc_caches, bits["enc_blocks"],
+                d_e_last, hyper, policy, optim_cfg, AUX_COEF, base_key=rng)
+            new_params["enc_blocks"] = new_enc
+            new_opt["enc_blocks"] = new_enc_opt
+            gsq = gsq + gsq_e
+            d_bnd_enc = jax.tree.map(
+                lambda w: jnp.zeros(w.shape, jnp.float32), bnd)
+            d_bnd_enc["enc_norm"] = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / scale, d_enc_norm)
+
+        # ---- boundary updates (embed gets head + input contributions) ----
+        (d_bnd_embed,) = embed_vjp(G_in)
+        d_bnd = jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32) + b.astype(jnp.float32)) / scale,
+            d_bnd_head, d_bnd_embed)
+        if d_bnd_enc is not None:
+            d_bnd = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 d_bnd, d_bnd_enc)
+        bnd_new, bnd_opt_new = {}, {}
+        for k in bnd_keys:
+            bnd_new[k], bnd_opt_new[k] = apply_update(
+                bnd[k], d_bnd[k], opt_state[k], hyper, optim_cfg)
+            gsq = gsq + sum(jnp.sum(jnp.square(g))
+                            for g in jax.tree.leaves(d_bnd[k]))
+        new_params.update(bnd_new)
+        new_opt.update(bnd_opt_new)
+
+        metrics["grad_norm"] = jnp.sqrt(gsq)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = lm.loss_fn(params, cfg, batch)
+        return metrics
+    return eval_step

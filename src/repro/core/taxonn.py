@@ -1,0 +1,223 @@
+"""The TaxoNN engine: SGD unrolled into an explicit per-layer G-chain.
+
+This is the paper's Eq. (2)-(9) as a JAX program.  Back-propagation is NOT
+delegated to ``jax.grad`` over the whole model; instead it is an explicit
+reverse ``lax.scan`` whose carry is the paper's G vector:
+
+    G_i = (G_{i+1} @ W_{i+1}) * f'_i          (Eq. 8)
+    dE/dW_i = G_i  (x)  X_i                   (Eq. 9)
+    W_i <- W_i - alpha * dE/dW_i              (Eq. 1, fused: step 4)
+
+realised at *layer* granularity: each scan step runs a local VJP of one
+layer's body at its cached (quantized) input X_i, quantizes the outgoing G,
+and applies the weight update immediately — the full-model gradient tree is
+never materialised (gradient lifetime = one scan step, the paper's pipeline
+in Fig. 3).  Because the data-parallel all-reduce of each layer's dW is
+issued *inside* the scan body, XLA overlaps it with the next layer's
+backward compute — the TPU analogue of the paper's timing overlap.
+
+Memory discipline matches the paper: the forward pass caches only each
+layer's input X_i (quantized to the activation (I,F) format); everything
+else (pre-activations, f') is recomputed in the backward body — this is
+remat-per-layer, i.e. the paper's "activation derivation unit" executed on
+the fly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.optim import OptimizerConfig, Hyper, apply_update
+from repro.util.scan import xscan
+from repro.quant.fixed_point import (
+    BitSchedule,
+    make_bit_schedule,
+    maybe_quantize,
+    quantize_ste,
+    quantize_stochastic,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Which tensor classes get the per-layer (I,F) treatment (static)."""
+
+    quantize_weights: bool = True
+    quantize_acts: bool = True
+    quantize_grads: bool = True
+    quantize_updates: bool = False   # strict paper mode: q(alpha*dW) in-format
+    stochastic: bool = False         # stochastic rounding for grads/updates
+    grad_scale: float = 1.0          # loss scaling for the low-bit G chain
+
+    @staticmethod
+    def off() -> "QuantPolicy":
+        return QuantPolicy(False, False, False, False, False, 1.0)
+
+
+def default_bits_for(num_units: int, enabled: bool = True) -> BitSchedule:
+    """Paper-style default: (2,12) weights/grads, (4,10) acts, ramped tail."""
+    return make_bit_schedule(num_units, weight=(2, 12), act=(4, 10),
+                             grad=(2, 12), enabled=enabled)
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (leaf policies)
+# ---------------------------------------------------------------------------
+
+def _is_matmul_leaf(w: Array) -> bool:
+    """Quantize matmul weights; keep vector params (norm scales, biases,
+    A_log, dt_bias, ...) full precision — the paper's wide accumulator /
+    derivation-unit registers."""
+    return w.ndim >= 2
+
+
+def quantize_weight_tree(tree: PyTree, w_i, w_f, enabled: Array,
+                         on: bool) -> PyTree:
+    if not on:
+        return tree
+    return jax.tree.map(
+        lambda w: maybe_quantize(w, w_i, w_f, enabled) if _is_matmul_leaf(w) else w,
+        tree)
+
+
+def _quant_grad(g: Array, g_i, g_f, enabled: Array, policy: QuantPolicy,
+                key: Optional[Array]) -> Array:
+    if not policy.quantize_grads:
+        return g
+    gf = g.astype(jnp.float32)
+    if policy.stochastic and key is not None:
+        q = quantize_stochastic(gf, g_i, g_f, key)
+    else:
+        q = quantize_ste(gf, g_i, g_f)
+    return (enabled * q + (1.0 - enabled) * gf).astype(g.dtype)
+
+
+def _bits_xs(bits: BitSchedule) -> dict:
+    """BitSchedule arrays as scan xs (leading dim = num units)."""
+    return {"w_i": bits.w_i, "w_f": bits.w_f, "a_i": bits.a_i, "a_f": bits.a_f,
+            "g_i": bits.g_i, "g_f": bits.g_f}
+
+
+# ---------------------------------------------------------------------------
+# Forward: scan saving quantized layer inputs (the X_i registers)
+# ---------------------------------------------------------------------------
+
+def forward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
+                  x0: Array, bits: BitSchedule, policy: QuantPolicy,
+                  quantize_shared: bool = True):
+    """body_fn(params_slice, shared, x, bits_layer) -> (y, aux).
+
+    Returns (x_final, X_caches [L,...], aux_sum).  X_caches hold the
+    *quantized* layer inputs — exactly what the backward pass re-linearises
+    at, so forward and backward see identical numerics.
+
+    ``quantize_shared=False`` for shared *activations* (e.g. encoder output
+    feeding every decoder layer) which are quantized once by the caller.
+    """
+    enabled = bits.enabled
+
+    def fwd(x, xs):
+        p_l, b_l = xs
+        if policy.quantize_acts:
+            xq = (enabled * quantize_ste(x.astype(jnp.float32),
+                                         b_l["a_i"], b_l["a_f"])
+                  + (1.0 - enabled) * x.astype(jnp.float32)).astype(x.dtype)
+        else:
+            xq = x
+        wq = quantize_weight_tree(p_l, b_l["w_i"], b_l["w_f"], enabled,
+                                  policy.quantize_weights)
+        sq = (quantize_weight_tree(shared, b_l["w_i"], b_l["w_f"], enabled,
+                                   policy.quantize_weights)
+              if quantize_shared else shared)
+        y, aux = body_fn(wq, sq, xq, b_l)
+        return y, (xq, aux)
+
+    x_final, (caches, auxs) = xscan(fwd, x0, (stacked, _bits_xs(bits)))
+    return x_final, caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Backward: the G-chain reverse scan with fused per-layer update
+# ---------------------------------------------------------------------------
+
+def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
+                   opt_stacked: PyTree, caches: PyTree, bits: BitSchedule,
+                   G_out: Array, hyper: Hyper, policy: QuantPolicy,
+                   optim_cfg: OptimizerConfig, aux_coef: float,
+                   base_key: Optional[Array] = None,
+                   quantize_shared: bool = True):
+    """Reverse scan over layers.
+
+    Per step (= paper steps 1-4 in one TDM frame):
+      1. re-linearise the layer body at (q(W_i), q(X_i))   [VJP]
+      2. dW_i, dShared_i, G_i  <- vjp(G_{i+1})
+      3. G_i <- q(G_i)  (the low-bit backward signal sent upstream)
+      4. W_i <- W_i - lr * dW_i  (fused update; DP all-reduce of dW_i is
+         inside this scan body -> overlapped with step i-1's compute)
+
+    Gradient-scale convention: ``G_out`` arrives SCALED by policy.grad_scale
+    (loss scaling for the low-bit chain).  dW is un-scaled just before the
+    update; G and dShared stay in the scaled domain (callers un-scale when
+    the gradient leaves the chain).
+
+    Returns (G_in, new_stacked, new_opt, dShared_accum_SCALED, grad_sq_sum).
+    """
+    enabled = bits.enabled
+    n_units = jax.tree.leaves(stacked)[0].shape[0]
+    inv_scale = 1.0 / policy.grad_scale
+
+    shared_f32 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), shared)
+
+    def bwd(carry, xs):
+        G, dshared_acc, gsq = carry
+        p_l, opt_l, x_l, b_l, idx = xs
+
+        def f(pw, sw, xx):
+            wq = quantize_weight_tree(pw, b_l["w_i"], b_l["w_f"], enabled,
+                                      policy.quantize_weights)
+            sq = (quantize_weight_tree(sw, b_l["w_i"], b_l["w_f"], enabled,
+                                       policy.quantize_weights)
+                  if quantize_shared else sw)
+            return body_fn(wq, sq, xx, b_l)
+
+        (y, aux), vjp = jax.vjp(f, p_l, shared, x_l)
+        dW, dS, dX = vjp((G.astype(y.dtype),
+                          jnp.asarray(aux_coef * policy.grad_scale,
+                                      jnp.float32)))
+
+        key = (jax.random.fold_in(base_key, idx)
+               if (base_key is not None and policy.stochastic) else None)
+        G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled, policy, key)
+
+        # un-scale, optionally quantize the update itself (strict paper mode)
+        def prep(g):
+            g = g.astype(jnp.float32) * inv_scale
+            if policy.quantize_updates:
+                upd = hyper.lr * g
+                if policy.stochastic and key is not None:
+                    updq = quantize_stochastic(upd, b_l["g_i"], b_l["g_f"], key)
+                else:
+                    updq = quantize_ste(upd, b_l["g_i"], b_l["g_f"])
+                upd = enabled * updq + (1.0 - enabled) * upd
+                g = upd / jnp.maximum(hyper.lr, 1e-20)
+            return g
+        dW = jax.tree.map(prep, dW)
+
+        new_p, new_opt = apply_update(p_l, dW, opt_l, hyper, optim_cfg)
+        gsq = gsq + sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dW))
+        dshared_acc = jax.tree.map(
+            lambda a, d: a + d.astype(jnp.float32), dshared_acc, dS)
+        return (G_next, dshared_acc, gsq), (new_p, new_opt)
+
+    xs = (stacked, opt_stacked, caches, _bits_xs(bits),
+          jnp.arange(n_units, dtype=jnp.int32))
+    (G_in, dshared, gsq), (new_stacked, new_opt) = xscan(
+        bwd, (G_out, shared_f32, jnp.float32(0.0)), xs, reverse=True)
+    return G_in, new_stacked, new_opt, dshared, gsq

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    SyntheticLMDataset,
+    SyntheticClassificationDataset,
+    StragglerTolerantLoader,
+)
+
+__all__ = ["SyntheticLMDataset", "SyntheticClassificationDataset",
+           "StragglerTolerantLoader"]

@@ -1,0 +1,76 @@
+"""bp_gstep: the TaxoNN G-chain step as one fused kernel.
+
+    G_i = q_g( (G_{i+1} @ W_{i+1}^T) * f'(Z_i) )          (paper Eq. 8)
+
+One VMEM-resident pass fuses the backward matmul, the activation-derivative
+multiply (the paper's derivation unit), and the low-bit re-quantization of
+the outgoing G — the intermediate (G @ W^T) never round-trips HBM.  This is
+the TDM insight transplanted: the scarce resource on TPU is HBM bandwidth,
+so the four TaxoNN multiplier time-slots become one fused VMEM pipeline.
+
+Shapes: G [T, Dout], W [Din, Dout] (forward orientation), Z [T, Din]
+(pre-activation of layer i).  Output G_i [T, Din].
+Grid (T/bm, Din/bn, Dout/bk); W^T is expressed through the BlockSpec index
+map (no materialised transpose).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import act_deriv, kq
+
+
+def _kernel(g_ref, w_ref, z_ref, o_ref, *, n_k: int, g_bits, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # G block [bm, bk] @ (W block [bn, bk])^T -> [bm, bn]
+    acc = jax.lax.dot_general(
+        g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        fprime = act_deriv(z_ref[...].astype(jnp.float32), act)
+        y = o_ref[...] * fprime
+        if g_bits is not None:
+            y = kq(y, *g_bits)
+        o_ref[...] = y
+
+
+def bp_gstep(g: jax.Array, w: jax.Array, z: jax.Array, *,
+             g_bits=(2, 12), act: str = "relu",
+             bm: int = 128, bn: int = 128, bk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """g: [T, Dout]; w: [Din, Dout]; z: [T, Din]. Returns G_i [T, Din] f32."""
+    t, dout = g.shape
+    din, dout2 = w.shape
+    assert dout == dout2 and z.shape == (t, din)
+    bm, bn, bk = min(bm, t), min(bn, din), min(bk, dout)
+    assert t % bm == 0 and din % bn == 0 and dout % bk == 0
+    n_k = dout // bk
+
+    grid = (t // bm, din // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, g_bits=g_bits, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # G
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),   # W (transposed via dot dims)
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # Z
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, din), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(g, w, z)

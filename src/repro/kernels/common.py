@@ -1,0 +1,57 @@
+"""Shared helpers for the TaxoNN Pallas kernels.
+
+In-kernel fixed-point quantization (pure ops — no custom_vjp: the TaxoNN
+engine owns gradients explicitly, kernels are forward pieces) and the
+activation-derivative unit (the paper's f' hardware block).
+
+TPU notes: block shapes are chosen 128-aligned for the MXU; accumulation is
+f32 in VMEM (the paper's wide accumulator registers).  On real TPU the
+(I,F)<=8-bit formats map to the int8 MXU path; this emulation computes the
+same values in f32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kq(x, i_bits: int, f_bits: int):
+    """Round-to-nearest fixed-point quantize (static bits inside a kernel)."""
+    step = jnp.float32(2.0 ** (-f_bits))
+    qmax = jnp.float32(2.0 ** (i_bits + f_bits) - 1)
+    qmin = jnp.float32(-(2.0 ** (i_bits + f_bits)))
+    k = jnp.clip(jnp.round(x.astype(jnp.float32) / step), qmin, qmax)
+    return k * step
+
+
+def act_fn(z, kind: str):
+    if kind == "relu":
+        return jnp.maximum(z, 0.0)
+    if kind == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-z))
+    if kind == "tanh":
+        return jnp.tanh(z)
+    if kind == "silu":
+        return z / (1.0 + jnp.exp(-z))
+    if kind == "identity":
+        return z
+    raise ValueError(kind)
+
+
+def act_deriv(z, kind: str):
+    """The paper's activation-derivation unit: f'(z) from the pre-activation.
+
+    sigma' = sigma(1-sigma); tanh' = 4*sigma'(2z); relu' = step(z)."""
+    if kind == "relu":
+        return (z > 0).astype(jnp.float32)
+    if kind == "sigmoid":
+        s = 1.0 / (1.0 + jnp.exp(-z))
+        return s * (1.0 - s)
+    if kind == "tanh":
+        t = jnp.tanh(z)
+        return 1.0 - t * t
+    if kind == "silu":
+        s = 1.0 / (1.0 + jnp.exp(-z))
+        return s * (1.0 + z * (1.0 - s))
+    if kind == "identity":
+        return jnp.ones_like(z)
+    raise ValueError(kind)

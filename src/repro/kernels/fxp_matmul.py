@@ -1,0 +1,72 @@
+"""fxp_matmul: fixed-point (I,F) quantized matmul + fused activation.
+
+The TaxoNN PE datapath's forward op: y = f(q_a(X) @ q_w(W)), with the
+MAC emulated at fixed point and a f32 (wide-register) accumulator.
+
+Tiling: grid (M/bm, N/bn, K/bk); X block [bm,bk] and W block [bk,bn] live
+in VMEM; the [bm,bn] output block accumulates in f32 across the k steps
+(revisiting semantics: k is the innermost, "arbitrary" dimension).  Block
+defaults are MXU-aligned (multiples of 128 on the contracted dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import act_fn, kq
+
+
+def _kernel(x_ref, w_ref, o_ref, *, n_k: int, xa_bits, w_bits, out_bits,
+            act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = kq(x_ref[...], *xa_bits)
+    wq = kq(w_ref[...], *w_bits)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        y = act_fn(o_ref[...], act)
+        if out_bits is not None:
+            y = kq(y, *out_bits)
+        o_ref[...] = y
+
+
+def fxp_matmul(x: jax.Array, w: jax.Array, *,
+               xa_bits=(4, 10), w_bits=(2, 12), out_bits=(4, 10),
+               act: str = "identity",
+               bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """x: [M, K] f32/bf16; w: [K, N]. Returns f32 [M, N]."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, \
+        (m, n, kdim, bm, bn, bk)
+    n_k = kdim // bk
+
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, xa_bits=xa_bits, w_bits=w_bits,
+                          out_bits=out_bits, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

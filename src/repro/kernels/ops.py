@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+where the Mosaic-compiled kernels run natively.  The wrappers pick
+MXU-aligned block sizes that divide the operand shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.fxp_matmul import fxp_matmul
+from repro.kernels.sgd_dw_update import sgd_dw_update
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "xa_bits", "w_bits", "out_bits", "act"))
+def fxp_matmul_op(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
+                  out_bits=(4, 10), act="identity"):
+    m, k = x.shape
+    n = w.shape[1]
+    return fxp_matmul(
+        x, w, xa_bits=xa_bits, w_bits=w_bits, out_bits=out_bits, act=act,
+        bm=_pick(128, m), bn=_pick(128, n), bk=_pick(128, k),
+        interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("g_bits", "act"))
+def bp_gstep_op(g, w, z, *, g_bits=(2, 12), act="relu"):
+    t, dout = g.shape
+    din = w.shape[0]
+    return bp_gstep(
+        g, w, z, g_bits=g_bits, act=act,
+        bm=_pick(128, t), bn=_pick(128, din), bk=_pick(128, dout),
+        interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits",))
+def sgd_dw_update_op(x, g, w, lr, *, w_bits=None):
+    t, din = x.shape
+    dout = g.shape[1]
+    return sgd_dw_update(
+        x, g, w, lr, w_bits=w_bits,
+        bm=_pick(128, din), bn=_pick(128, dout), bk=_pick(128, t),
+        interpret=_on_cpu())

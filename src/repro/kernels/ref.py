@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import act_deriv, act_fn, kq
+
+
+def fxp_matmul_ref(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
+                   out_bits=(4, 10), act="identity"):
+    xq = kq(x, *xa_bits)
+    wq = kq(w, *w_bits)
+    y = act_fn(jnp.dot(xq, wq, preferred_element_type=jnp.float32), act)
+    if out_bits is not None:
+        y = kq(y, *out_bits)
+    return y
+
+
+def bp_gstep_ref(g, w, z, *, g_bits=(2, 12), act="relu"):
+    gi = jnp.dot(g.astype(jnp.float32), w.astype(jnp.float32).T,
+                 preferred_element_type=jnp.float32)
+    gi = gi * act_deriv(z.astype(jnp.float32), act)
+    if g_bits is not None:
+        gi = kq(gi, *g_bits)
+    return gi
+
+
+def sgd_dw_update_ref(x, g, w, lr, *, w_bits=None):
+    dw = jnp.dot(x.astype(jnp.float32).T, g.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    w_new = w.astype(jnp.float32) - lr * dw
+    if w_bits is not None:
+        w_new = kq(w_new, *w_bits)
+    return w_new

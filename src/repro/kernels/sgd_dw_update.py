@@ -1,0 +1,76 @@
+"""sgd_dw_update: fused dW computation + in-place SGD step.
+
+    W <- q_w( W - lr * (X^T @ G) )           (paper Eq. 9 + Eq. 1, step 4)
+
+The gradient tensor dW = X^T G is accumulated in VMEM across the token
+blocks and folded into the weight update in the same kernel — dW never
+exists in HBM.  This is the TaxoNN fused-update property (gradient
+lifetime = one PE pass) expressed at the memory-hierarchy level that
+matters on TPU.
+
+Shapes: X [T, Din], G [T, Dout], W [Din, Dout] -> W_new [Din, Dout].
+Grid (Din/bm, Dout/bn, T/bk): the contraction is over tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import kq
+
+
+def _kernel(x_ref, g_ref, w_ref, lr_ref, o_ref, *, n_k: int, w_bits):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (X block [bk, bm])^T @ G block [bk, bn] -> [bm, bn]
+    acc = jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        w_new = w_ref[...].astype(jnp.float32) - lr_ref[0] * o_ref[...]
+        if w_bits is not None:
+            w_new = kq(w_new, *w_bits)
+        o_ref[...] = w_new
+
+
+def sgd_dw_update(x: jax.Array, g: jax.Array, w: jax.Array, lr,
+                  *, w_bits=None,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """x: [T, Din]; g: [T, Dout]; w: [Din, Dout]; lr scalar.
+    Returns W - lr * x^T g (optionally re-quantized to (I,F))."""
+    t, din = x.shape
+    t2, dout = g.shape
+    assert t == t2 and w.shape == (din, dout)
+    bm, bn, bk = min(bm, din), min(bn, dout), min(bk, t)
+    assert din % bm == 0 and dout % bn == 0 and t % bk == 0
+    n_k = t // bk
+
+    lr_arr = jnp.asarray([lr], jnp.float32)
+    grid = (din // bm, dout // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, w_bits=w_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),   # X
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # G
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # W
+            pl.BlockSpec(memory_space=pl.ANY),                # lr (scalar)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, g, w, lr_arr)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function (TaxoNN train step /
+prefill / decode) against ShapeDtypeStruct inputs under the production mesh,
+prints memory_analysis() (proves it fits) and cost_analysis() (FLOPs/bytes
+for the roofline), parses the optimized HLO for collective bytes, and writes
+one JSON record per cell to --out (incremental: existing records are skipped
+unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k --mesh single
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_NAMES, get_config, input_specs, param_specs, SHAPE_CELLS,
+    SHAPES_BY_NAME, cell_is_applicable,
+)
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.dist.api import (activation_sharding_ctx, make_default_rules,
+                            perf_options_ctx)
+from repro.dist.hlo_analysis import analyze_compiled
+from repro.dist.sharding import (
+    batch_pspecs, decode_state_pspecs, opt_pspecs, param_pspecs, to_named,
+    replicated,
+)
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models.config import ModelConfig
+from repro.optim import Hyper, OptimizerConfig
+from repro.serving import decode_step, prefill, init_decode_state
+from repro.util.scan import unrolled_scans_ctx
+
+
+def model_flops_global(cfg: ModelConfig, cell) -> float:
+    """MODEL_FLOPS: 6*N*D train, 2*N*D forward-only; MoE uses active params."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def build_cell(cfg: ModelConfig, cell, mesh):
+    """Returns (fn, arg_specs, in_shardings) for the cell's step kind."""
+    specs = input_specs(cfg, cell.name)
+    p_specs = param_specs(cfg)
+    p_sh = to_named(param_pspecs(cfg, p_specs, mesh), mesh)
+
+    if cell.kind == "train":
+        ocfg = OptimizerConfig(kind="sgd")
+        policy = QuantPolicy(grad_scale=128.0)  # paper-faithful: quant ON
+        step = make_train_step(cfg, policy, ocfg, engine="taxonn")
+        opt_specs = jax.eval_shape(lambda p: init_train_state(p, ocfg), p_specs)
+        opt_sh = to_named(opt_pspecs(
+            cfg, opt_specs, param_pspecs(cfg, p_specs, mesh), mesh), mesh)
+        bits = default_bits(cfg, enabled=True)
+        bits_specs = jax.eval_shape(lambda: bits)
+        hyper_specs = jax.eval_shape(
+            lambda: Hyper(lr=jnp.float32(1e-3), step=jnp.int32(0)))
+        batch_sh = to_named(batch_pspecs(specs, mesh), mesh)
+
+        def fn(params, opt_state, batch, hyper, bits_):
+            return step(params, opt_state, batch, hyper, bits_)
+
+        args = (p_specs, opt_specs, specs, hyper_specs, bits_specs)
+        shardings = (p_sh, opt_sh, batch_sh,
+                     replicated(hyper_specs, mesh),
+                     replicated(bits_specs, mesh))
+        return fn, args, shardings, (0, 1)  # donate params + opt state
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return prefill(params, cfg, batch, max_len=cell.seq_len)
+        batch_sh = to_named(batch_pspecs(specs, mesh), mesh)
+        return fn, (p_specs, specs), (p_sh, batch_sh), ()
+
+    # decode
+    state_specs = specs["state"]
+    tok_specs = specs["tokens"]
+
+    def fn(params, state, tokens):
+        return decode_step(params, cfg, state, tokens)
+
+    state_sh = to_named(decode_state_pspecs(cfg, state_specs, mesh), mesh)
+    tok_sh = to_named(batch_pspecs(tok_specs, mesh), mesh)
+    return (fn, (p_specs, state_specs, tok_specs), (p_sh, state_sh, tok_sh),
+            (1,))  # donate the decode state (cache update in place)
+
+
+def cost_units(cfg: ModelConfig) -> int:
+    """Depth units the cost pass extrapolates over (hybrid scans groups)."""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def reduced_depth(cfg: ModelConfig, k: int) -> ModelConfig:
+    changes = {"num_layers": k}
+    if cfg.family == "hybrid":
+        changes["num_layers"] = k * cfg.attn_every
+    if cfg.family == "encdec":
+        changes["num_encoder_layers"] = k
+    return dataclasses.replace(cfg, **changes)
+
+
+def cost_pass(cfg: ModelConfig, cell, mesh, rules) -> dict:
+    """Exact per-step cost via reduced-depth UNROLLED compiles + linear
+    extrapolation in depth.
+
+    XLA's cost_analysis counts while-loop bodies once, so the production
+    (scanned) artifact under-reports FLOPs/bytes/collectives by the scan
+    length.  We re-lower the same cell at depth k=2 and k=4 with every scan
+    unrolled (see util/scan.py), giving exact counts m(k), then use that
+    m(k) is affine in depth: m(L) = m(2) + (m(4)-m(2))/2 * (L-2).
+    """
+    units_full = cost_units(cfg)
+    recs = {}
+    for k in (2, 4):
+        rcfg = reduced_depth(cfg, k)
+        with jax.set_mesh(mesh), activation_sharding_ctx(rules), \
+                unrolled_scans_ctx():
+            fn, args, shardings, donate = build_cell(rcfg, cell, mesh)
+            compiled = jax.jit(fn, in_shardings=shardings,
+                               donate_argnums=donate).lower(*args).compile()
+        recs[k] = analyze_compiled(compiled, mesh.size)
+        del compiled
+
+    def extrap(get) -> float:
+        m2, m4 = get(recs[2]), get(recs[4])
+        return float(m2 + (m4 - m2) / 2.0 * (units_full - 2))
+
+    flops = extrap(lambda r: r["flops_per_device"])
+    hbm = extrap(lambda r: r["hbm_bytes_per_device"])
+    moved = extrap(lambda r: r["collectives"]["moved_bytes_per_device"])
+    counts = {}
+    for kind in set(recs[2]["collectives"]["counts"]) | set(
+            recs[4]["collectives"]["counts"]):
+        counts[kind] = round(extrap(
+            lambda r, kk=kind: r["collectives"]["counts"].get(kk, 0)))
+    from repro.dist.hlo_analysis import roofline_terms
+    return {
+        "method": "unrolled depth-2/4 extrapolation",
+        "units_full": units_full,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm,
+        "collective_moved_bytes_per_device": moved,
+        "collective_counts": counts,
+        "terms": roofline_terms(flops, hbm, moved),
+        "probe_points": {str(k): {
+            "flops": recs[k]["flops_per_device"],
+            "hbm": recs[k]["hbm_bytes_per_device"],
+            "moved": recs[k]["collectives"]["moved_bytes_per_device"],
+        } for k in (2, 4)},
+    }
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             force: bool = False, verbose: bool = True,
+             opts: tuple = ()) -> dict:
+    mesh_tag = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    opt_tag = ("__" + "-".join(sorted(opts))) if opts else ""
+    rec_path = out_dir / f"{arch}__{cell_name}__{mesh_tag}{opt_tag}.json"
+    if rec_path.exists() and not force:
+        return json.loads(rec_path.read_text())
+
+    cfg = get_config(arch)
+    if "pad_heads" in opts and cfg.num_heads:
+        m = 16  # model-axis size of the production mesh
+        if cfg.num_heads % m:
+            hkv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+            gp = g
+            while (hkv * gp) % m:
+                gp += 1
+            if gp / g <= 1.5:  # padding-overhead cap
+                cfg = dataclasses.replace(cfg, padded_heads=hkv * gp)
+    cell = SHAPES_BY_NAME[cell_name]
+    record = {"arch": arch, "cell": cell_name, "mesh": mesh_tag,
+              "kind": cell.kind, "family": cfg.family,
+              "opts": sorted(opts),
+              "padded_heads": cfg.padded_heads}
+
+    if not cell_is_applicable(cfg, cell):
+        record["status"] = "skipped"
+        record["reason"] = ("long-context decode requires sub-quadratic "
+                            "attention; full-attention arch (DESIGN.md §5)")
+        rec_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rules = make_default_rules(batch_axes(mesh),
+                               seq_parallel="seq_parallel" in opts)
+    t0 = time.time()
+    try:
+        with perf_options_ctx(opts), jax.set_mesh(mesh), \
+                activation_sharding_ctx(rules):
+            fn, args, shardings, donate = build_cell(cfg, cell, mesh)
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        analysis = analyze_compiled(compiled, n_dev)
+        mf_global = model_flops_global(cfg, cell)
+        mf_dev = mf_global / n_dev
+        record.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "model_flops_global": mf_global,
+            "model_flops_per_device": mf_dev,
+            "scanned_artifact": analysis,   # memory truth; costs count scan bodies once
+        })
+        # --- exact cost pass (unrolled reduced-depth extrapolation) -------
+        t1 = time.time()
+        with perf_options_ctx(opts):
+            cost = cost_pass(cfg, cell, mesh, rules)
+        record["cost_pass_s"] = round(time.time() - t1, 1)
+        hlo_flops = cost["flops_per_device"]
+        record["cost"] = cost
+        record["useful_flops_ratio"] = (
+            mf_dev / hlo_flops if hlo_flops else None)
+        if verbose:
+            ma = analysis.get("memory_analysis", {})
+            t = cost["terms"]
+            print(f"[{arch} x {cell_name} x {mesh_tag}] OK "
+                  f"compile={t_compile:.0f}s cost={record['cost_pass_s']:.0f}s "
+                  f"flops/dev={hlo_flops:.3e} "
+                  f"useful={record['useful_flops_ratio'] and round(record['useful_flops_ratio'],2)} "
+                  f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"dom={t['dominant']} "
+                  f"[c={t['compute_s']*1e3:.1f} m={t['memory_s']*1e3:.1f} "
+                  f"x={t['collective_s']*1e3:.1f}]ms", flush=True)
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{arch} x {cell_name} x {mesh_tag}] FAIL {type(e).__name__}: "
+                  f"{str(e)[:200]}", flush=True)
+    rec_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated perf options (seq_parallel, "
+                         "pad_heads, moe_rowcombine) — see §Perf")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    cells = ([c.name for c in SHAPE_CELLS]
+             if (args.all or not args.shape) else (args.shape,))
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for cell in cells:
+            for multi in meshes:
+                rec = run_cell(arch, cell, multi, out_dir, force=args.force,
+                               opts=opts)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_skip += s == "skipped"
+                n_fail += s == "error"
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped (by design), "
+          f"{n_fail} failed", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

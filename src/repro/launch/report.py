@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md tables from dry-run records.
+
+    PYTHONPATH=src python -m repro.launch.report [--out results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+
+
+def fmt_bytes(b):
+    if b >= 2 ** 30:
+        return f"{b/2**30:.2f}GiB"
+    if b >= 2 ** 20:
+        return f"{b/2**20:.1f}MiB"
+    return f"{b/2**10:.0f}KiB"
+
+
+def load(out_dir):
+    recs = [json.loads(pathlib.Path(f).read_text())
+            for f in sorted(glob.glob(f"{out_dir}/*.json"))]
+    return recs
+
+
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def render_dryrun_table(recs) -> str:
+    lines = [
+        "| arch | cell | mesh | status | compile | args/dev | temp/dev | collectives (scanned artifact) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]), r["mesh"])
+    for r in sorted(recs, key=key):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+                         f"skip (by design) | — | — | — | — |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+                         f"ERROR | — | — | — | {r['error'][:60]} |")
+            continue
+        ma = r["scanned_artifact"]["memory_analysis"]
+        coll = r["scanned_artifact"]["collectives"]["counts"]
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(coll.items())) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f}s | "
+            f"{fmt_bytes(ma.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(ma.get('temp_size_in_bytes', 0))} | {cstr} |")
+    return "\n".join(lines)
+
+
+def render_roofline_table(recs) -> str:
+    lines = [
+        "| arch | cell | compute | memory | collective | dominant | bound | MODEL_FLOPs/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]))
+    for r in sorted([r for r in recs if r["mesh"] == "pod_16x16"], key=key):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | — | — | — | "
+                         f"{'skip: sub-quadratic attn required' if r['status']=='skipped' else 'ERROR'} |")
+            continue
+        t = r["cost"]["terms"]
+
+        def ms(x):
+            return f"{x*1e3:.1f}ms" if x >= 1e-4 else f"{x*1e6:.0f}us"
+        note = ""
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {ms(t['compute_s'])} | "
+            f"{ms(t['memory_s'])} | {ms(t['collective_s'])} | "
+            f"**{t['dominant']}** | {ms(t['step_time_lower_bound_s'])} | "
+            f"{uf:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--which", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    recs = load(args.out)
+    if args.which in ("dryrun", "both"):
+        print("## Dry-run records\n")
+        print(render_dryrun_table(recs))
+        print()
+    if args.which in ("roofline", "both"):
+        print("## Roofline (single-pod 16x16, per device, per step)\n")
+        print(render_roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

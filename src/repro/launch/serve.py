@@ -1,0 +1,84 @@
+"""Serving driver: continuous-batching decode over the slot scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --requests 8 --max-new 16
+
+Demonstrates the production serving path: prefill per admitted request,
+slot-based continuous batching, jitted decode step with donated cache
+state, per-request latency accounting.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.train import _reduce
+from repro.models import lm
+from repro.serving import (BatchScheduler, Request, decode_step,
+                           init_decode_state, prefill)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = _reduce(cfg)
+    params = lm.init_params(jax.random.key(0), cfg)
+    print(f"[serve] {cfg.name} ({cfg.family}) slots={args.slots}", flush=True)
+
+    cache_dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+    def prefill_one(tokens):
+        return prefill(params, cfg, {"tokens": jnp.asarray(tokens)},
+                       args.max_len, cache_dtype)
+
+    decode_fn = jax.jit(
+        lambda state, toks: decode_step(params, cfg, state, toks),
+        donate_argnums=(0,))
+
+    def merge_fn(state, slot_state, i):
+        def wr(dst, src):
+            return dst.at[:, i].set(src[:, 0])
+        return {"caches": jax.tree.map(wr, state["caches"],
+                                       slot_state["caches"]),
+                "pos": slot_state["pos"]}
+
+    init_state = init_decode_state(cfg, args.slots, args.max_len, cache_dtype)
+    sched = BatchScheduler(args.slots, prefill_one, decode_fn, merge_fn,
+                           init_state)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        sched.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=(args.prompt_len,)).astype(np.int32),
+            max_new_tokens=args.max_new))
+    finished = sched.run_until_drained()
+    dt = time.time() - t0
+    tok = sum(len(r.generated) for r in finished)
+    print(f"[serve] {len(finished)}/{args.requests} requests, {tok} tokens "
+          f"in {dt:.1f}s ({tok/dt:.1f} tok/s, {sched.steps_run} decode steps)",
+          flush=True)
+    for r in finished[:3]:
+        print(f"  req {r.uid}: {r.generated[:8]}...", flush=True)
+    return finished
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Production training driver: elastic mesh, checkpoint/restart, straggler-
+tolerant data loading, TaxoNN engine.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --steps 200 --reduced --ckpt-dir /tmp/run1 [--resume]
+
+Elasticity: the mesh is built from whatever devices exist at START-UP
+(``--data X --model Y`` or auto); checkpoints store logical arrays, so a
+job checkpointed on one topology restarts on another (restore reshards via
+the new mesh's shardings).  Fault tolerance: atomic async checkpoints every
+``--ckpt-every`` steps; on restart the step-indexed data pipeline resumes
+exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, restore_checkpoint, latest_step
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.data import SyntheticLMDataset, StragglerTolerantLoader
+from repro.dist.api import activation_sharding_ctx, make_default_rules
+from repro.dist.sharding import batch_pspecs, param_pspecs, to_named
+from repro.launch.mesh import batch_axes, make_debug_mesh
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig, cosine_schedule
+
+
+def reduced_for_cpu(cfg):
+    from test_support_reduce import reduce_config  # pragma: no cover
+    return reduce_config(cfg)
+
+
+def _reduce(cfg):
+    """Small same-family twin for CPU runs (--reduced)."""
+    changes = dict(num_layers=min(cfg.num_layers, 4), d_model=128,
+                   vocab_size=512, compute_dtype="float32")
+    if cfg.num_heads:
+        kv = cfg.num_kv_heads if cfg.num_kv_heads == cfg.num_heads else 2
+        changes.update(num_heads=4, num_kv_heads=min(kv, 4), head_dim=32)
+    if cfg.d_ff:
+        changes.update(d_ff=256)
+    if cfg.family == "moe":
+        changes.update(num_experts=4, experts_per_token=2, moe_d_ff=64)
+    if cfg.use_mla:
+        changes.update(kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16,
+                       v_head_dim=32)
+    if cfg.family in ("ssm", "hybrid"):
+        changes.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=32)
+    if cfg.family == "hybrid":
+        changes.update(num_layers=4, attn_every=2)
+    if cfg.family == "encdec":
+        changes.update(num_encoder_layers=2, encoder_seq=32)
+    if cfg.family == "vlm":
+        changes.update(num_patches=8)
+    return dataclasses.replace(cfg, **changes)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="momentum",
+                    choices=["sgd", "momentum", "momentum8", "adam"])
+    ap.add_argument("--quantize", action="store_true",
+                    help="enable the TaxoNN per-layer (I,F) schedule")
+    ap.add_argument("--engine", default="taxonn",
+                    choices=["taxonn", "autodiff"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced twin of the arch")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data", type=int, default=0,
+                    help="data-axis size (0 = all devices)")
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--deadline-s", type=float, default=5.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = _reduce(cfg)
+
+    n_dev = len(jax.devices())
+    n_data = args.data or max(1, n_dev // args.model)
+    mesh = make_debug_mesh(n_data, args.model)
+    rules = make_default_rules(batch_axes(mesh))
+    print(f"[train] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
+          f"params~{cfg.param_count()/1e6:.1f}M", flush=True)
+
+    ocfg = OptimizerConfig(kind=args.optimizer, grad_clip=1.0)
+    policy = (QuantPolicy(grad_scale=64.0) if args.quantize
+              else QuantPolicy.off())
+    bits = default_bits(cfg, enabled=args.quantize)
+    sched = cosine_schedule(args.lr, warmup=max(10, args.steps // 20),
+                            total=args.steps)
+
+    params = lm.init_params(jax.random.key(0), cfg)
+    opt_state = init_train_state(params, ocfg)
+    start_step = 0
+
+    p_sh = to_named(param_pspecs(cfg, params, mesh), mesh)
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start_step, _ = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state),
+            shardings=(p_sh, None) if args.model > 1 else None)
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq_len, args.global_batch)
+    loader = StragglerTolerantLoader(
+        lambda s: ds.batch_at(s), deadline_s=args.deadline_s)
+
+    step_fn = jax.jit(make_train_step(cfg, policy, ocfg, engine=args.engine),
+                      donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    with jax.set_mesh(mesh), activation_sharding_ctx(rules):
+        for step in range(start_step, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in loader.get(step).items()}
+            hyper = Hyper(lr=jnp.float32(sched(step)), step=jnp.int32(step))
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 hyper, bits)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {sched(step):.2e} {dt:.1f}s "
+                      f"data_skips={loader.skips}", flush=True)
+            if ckpt and step and step % args.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"arch": cfg.name, "loss": losses[-1]})
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state),
+                  extra={"arch": cfg.name, "loss": losses[-1]})
+        ckpt.wait()
+    loader.close()
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({np.mean(losses[:5]):.3f} -> {np.mean(losses[-5:]):.3f} smoothed)",
+          flush=True)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

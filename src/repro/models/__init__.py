@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, ShapeCell, SHAPE_CELLS
+from repro.models import layers, ssm, blocks, lm
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPE_CELLS", "layers", "ssm", "blocks", "lm"]

@@ -1,0 +1,255 @@
+"""Per-family block functions: init + full-sequence apply + decode apply.
+
+Uniform interface consumed by both the autodiff path and the TaxoNN
+manual-BP engine (core/taxonn.py):
+
+  apply(params, x, cfg, positions) -> (new_x, aux_loss_scalar)
+  decode(params, x, cfg, cache, pos) -> (new_x, new_cache)
+
+Residuals and pre-norms are internal to the block; ``new_x`` is the full
+residual-stream output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.api import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (dense / moe / vlm backbone; encoder variant)
+# ---------------------------------------------------------------------------
+
+def init_transformer_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_norm(cfg.d_model, cfg),
+        "mlp_norm": L.init_norm(cfg.d_model, cfg),
+    }
+    if cfg.use_mla:
+        p["attn"] = L.init_mla(k1, cfg)
+    else:
+        p["attn"] = L.init_attention(k1, cfg)
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def transformer_block(params, x: Array, cfg: ModelConfig, positions: Array,
+                      causal: bool = True):
+    x = constrain(x, "btd")
+    h = L.apply_norm(params["attn_norm"], x, cfg)
+    if cfg.use_mla:
+        attn_out = L.mla_attention(params["attn"], h, cfg, positions)
+    else:
+        attn_out = L.attention(params["attn"], h, cfg, positions, causal=causal)
+    x = x + attn_out
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        mlp_out, aux = L.moe(params["moe"], h, cfg)
+    else:
+        mlp_out, aux = L.mlp(params["mlp"], h, cfg), jnp.float32(0.0)
+    x = constrain(x + mlp_out, "btd")
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if cfg.use_mla:
+        return L.init_mla_cache(cfg, batch, max_len, dtype)
+    return L.init_kv_cache(cfg, batch, max_len, dtype)
+
+
+def transformer_block_decode(params, x: Array, cfg: ModelConfig, cache, pos):
+    h = L.apply_norm(params["attn_norm"], x, cfg)
+    if cfg.use_mla:
+        attn_out, cache = L.mla_decode(params["attn"], h, cfg, cache, pos)
+    else:
+        attn_out, cache = L.attention_decode(params["attn"], h, cfg, cache, pos)
+    x = x + attn_out
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        mlp_out, _ = L.moe(params["moe"], h, cfg)
+    else:
+        mlp_out = L.mlp(params["mlp"], h, cfg)
+    return x + mlp_out, cache
+
+
+def transformer_block_prefill(params, x: Array, cfg: ModelConfig,
+                              positions: Array, cache_len: int,
+                              cache_dtype=jnp.bfloat16):
+    """Forward + seed the decode cache from this layer's K/V."""
+    x0 = constrain(x, "btd")
+    h = L.apply_norm(params["attn_norm"], x0, cfg)
+    if cfg.use_mla:
+        attn_out, (ckv, kpe) = L.mla_attention(params["attn"], h, cfg,
+                                               positions, return_cache=True)
+        t = ckv.shape[1]
+        cache = {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, cache_len - t), (0, 0))).astype(cache_dtype),
+            "kpe": jnp.pad(kpe, ((0, 0), (0, cache_len - t), (0, 0))).astype(cache_dtype),
+        }
+    else:
+        attn_out, (k, v) = L.attention(params["attn"], h, cfg, positions,
+                                       causal=True, return_kv=True)
+        length = cache_len if cfg.swa_window is None else min(
+            cfg.swa_window, cache_len)
+        cache = {"k": L.fill_ring(k, length).astype(cache_dtype),
+                 "v": L.fill_ring(v, length).astype(cache_dtype)}
+    x = x0 + attn_out
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        mlp_out, _ = L.moe(params["moe"], h, cfg)
+    else:
+        mlp_out = L.mlp(params["mlp"], h, cfg)
+    return constrain(x + mlp_out, "btd"), cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (ssm / hybrid backbone)
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig):
+    return {"norm": L.init_norm(cfg.d_model, cfg), "mamba": S.init_mamba(key, cfg)}
+
+
+def mamba_block(params, x: Array, cfg: ModelConfig, positions=None):
+    x = constrain(x, "btd")
+    h = L.apply_norm(params["norm"], x, cfg)
+    out, _ = S.mamba_forward(params["mamba"], h, cfg)
+    return constrain(x + out, "btd"), jnp.float32(0.0)
+
+
+def mamba_block_decode(params, x: Array, cfg: ModelConfig, cache, pos):
+    h = L.apply_norm(params["norm"], x, cfg)
+    out, cache = S.mamba_decode(params["mamba"], h, cfg, cache)
+    return x + out, cache
+
+
+def mamba_block_prefill(params, x: Array, cfg: ModelConfig, positions=None,
+                        cache_dtype=jnp.bfloat16):
+    x0 = constrain(x, "btd")
+    h = L.apply_norm(params["norm"], x0, cfg)
+    out, (hT, conv_tail) = S.mamba_forward(params["mamba"], h, cfg)
+    cache = {"h": hT, "conv": conv_tail.astype(cache_dtype)}
+    return constrain(x0 + out, "btd"), cache
+
+
+# ---------------------------------------------------------------------------
+# Whisper decoder block (self-attn + cross-attn + mlp)
+# ---------------------------------------------------------------------------
+
+def init_decoder_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": L.init_norm(cfg.d_model, cfg),
+        "self_attn": L.init_attention(k1, cfg),
+        "cross_norm": L.init_norm(cfg.d_model, cfg),
+        "cross_attn": L.init_attention(k2, cfg),
+        "mlp_norm": L.init_norm(cfg.d_model, cfg),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def _cross_attention(params, x: Array, enc_out: Array, cfg: ModelConfig):
+    """Cross-attention: queries from decoder x, keys/values from enc_out."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    k = L._expand_kv(k, cfg.gqa_groups)
+    v = L._expand_kv(v, cfg.gqa_groups)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
+
+
+def decoder_block(params, x: Array, cfg: ModelConfig, positions: Array,
+                  enc_out: Array):
+    x = constrain(x, "btd")
+    h = L.apply_norm(params["self_norm"], x, cfg)
+    x = x + L.attention(params["self_attn"], h, cfg, positions, causal=True)
+    h = L.apply_norm(params["cross_norm"], x, cfg)
+    x = x + _cross_attention(params["cross_attn"], h, enc_out, cfg)
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    x = constrain(x + L.mlp(params["mlp"], h, cfg), "btd")
+    return x, jnp.float32(0.0)
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+                       dtype=jnp.bfloat16):
+    """Self-attn KV ring + precomputed cross-attn K/V (filled at prefill)."""
+    hd = cfg.head_dim
+    return {
+        "self": L.init_kv_cache(cfg, batch, max_len, dtype),
+        "cross_k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def decoder_block_decode(params, x: Array, cfg: ModelConfig, cache, pos):
+    dt = x.dtype
+    h = L.apply_norm(params["self_norm"], x, cfg)
+    attn_out, self_cache = L.attention_decode(params["self_attn"], h, cfg,
+                                              cache["self"], pos)
+    x = x + attn_out
+    h = L.apply_norm(params["cross_norm"], x, cfg)
+    q = jnp.einsum("btd,dhk->bthk", h, params["cross_attn"]["wq"].astype(dt))
+    k = L._expand_kv(cache["cross_k"].astype(dt), cfg.gqa_groups)
+    v = L._expand_kv(cache["cross_v"].astype(dt), cfg.gqa_groups)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    x = x + jnp.einsum("bthk,hkd->btd", out,
+                       params["cross_attn"]["wo"].astype(dt))
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    x = x + L.mlp(params["mlp"], h, cfg)
+    return x, {"self": self_cache, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"]}
+
+
+def decoder_block_prefill(params, x: Array, cfg: ModelConfig, positions: Array,
+                          enc_out: Array, cache_len: int,
+                          cache_dtype=jnp.bfloat16):
+    dt = x.dtype
+    h = L.apply_norm(params["self_norm"], x, cfg)
+    attn_out, (k, v) = L.attention(params["self_attn"], h, cfg, positions,
+                                   causal=True, return_kv=True)
+    self_cache = {"k": L.fill_ring(k, cache_len).astype(cache_dtype),
+                  "v": L.fill_ring(v, cache_len).astype(cache_dtype)}
+    x = x + attn_out
+    h = L.apply_norm(params["cross_norm"], x, cfg)
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    params["cross_attn"]["wk"].astype(dt))
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    params["cross_attn"]["wv"].astype(dt))
+    x = x + _cross_attention(params["cross_attn"], h, enc_out, cfg)
+    h = L.apply_norm(params["mlp_norm"], x, cfg)
+    x = x + L.mlp(params["mlp"], h, cfg)
+    cache = {"self": self_cache, "cross_k": ck.astype(cache_dtype),
+             "cross_v": cv.astype(cache_dtype)}
+    return x, cache
+
+
+def fill_cross_cache(params_stacked, enc_out: Array, cfg: ModelConfig,
+                     dtype=jnp.bfloat16):
+    """Compute cross-attn K/V for every decoder layer from encoder output."""
+    def one(p):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wv"].astype(dt))
+        return k.astype(dtype), v.astype(dtype)
+    return jax.vmap(one)(params_stacked)  # leading L axis

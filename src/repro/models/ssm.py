@@ -1,0 +1,242 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+TPU adaptation: we implement the *chunked* SSD algorithm — intra-chunk work
+is dense matmuls (MXU-friendly), the inter-chunk recurrence is a short
+``lax.scan`` over T/Q chunk states.  A step-by-step ``lax.scan`` over time
+would serialise 4096+ elementwise steps and starve the MXU; the chunked dual
+form is the TPU-native formulation of the same recurrence.
+
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T        (per head, A scalar)
+  y_t = C_t . h_t + D_skip * x_t
+
+Shapes: x [B,T,H,P] (P = head dim), B,C [B,T,N] (single group), dt [B,T,H].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.util.scan import xscan
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+def init_mamba(key, cfg: ModelConfig):
+    """Component-wise projections (TP-friendly: w_z/w_x shard on d_inner
+    columns; w_B/w_C/w_dt are tiny and replicated — the packed zxbcdt matrix
+    of the reference implementation splits at TP-hostile boundaries)."""
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    s = D ** -0.5
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(ks[5], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_z": jax.random.normal(ks[0], (D, di), jnp.float32) * s,
+        "w_x": jax.random.normal(ks[1], (D, di), jnp.float32) * s,
+        "w_B": jax.random.normal(ks[2], (D, N), jnp.float32) * s,
+        "w_C": jax.random.normal(ks[3], (D, N), jnp.float32) * s,
+        "w_dt": jax.random.normal(ks[4], (D, H), jnp.float32) * s,
+        "conv_x": jax.random.normal(
+            ks[6], (cfg.conv_kernel, di), jnp.float32) * di ** -0.5,
+        "conv_B": jax.random.normal(
+            ks[7], (cfg.conv_kernel, N), jnp.float32) * N ** -0.5,
+        "conv_C": jax.random.normal(
+            jax.random.fold_in(key, 99), (cfg.conv_kernel, N),
+            jnp.float32) * N ** -0.5,
+        "conv_b_x": jnp.zeros((di,), jnp.float32),
+        "conv_b_B": jnp.zeros((N,), jnp.float32),
+        "conv_b_C": jnp.zeros((N,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": init_rmsnorm(di),
+        "out_proj": jax.random.normal(
+            jax.random.fold_in(key, 100), (di, D), jnp.float32) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. x: [B,T,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K=4: unrolled shifts beat conv_general on TPU
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(dA: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} dA[..., k] (i>=j),
+    -inf below the causal diagonal.  dA: [..., Q]."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # cum_i - cum_j
+    iidx = jnp.arange(q)
+    mask = iidx[:, None] >= iidx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, h0: Array | None = None):
+    """Chunked SSD. x: [B,T,H,P]; dt: [B,T,H]; A: [H]; B,C: [B,T,N].
+
+    Returns (y [B,T,H,P], h_final [B,H,N,P]).
+    """
+    b, t_orig, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, t_orig)
+    pad = (-t_orig) % q
+    if pad:  # dt=0 padding: decay exp(0)=1 and zero input -> state-neutral
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    t = t_orig + pad
+    nc = t // q
+
+    dA = dt * A  # [B,T,H], negative (f32)
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+
+    def r(v, extra):  # reshape to chunks
+        return v.reshape((b, nc, q) + extra)
+
+    xc, dAc = r(xdt, (h, p)), r(dA, (h,))
+    Bc, Cc = r(B, (n,)), r(C, (n,))
+
+    cum = jnp.cumsum(dAc, axis=2)                         # [B,nc,Q,H]
+
+    # ---- intra-chunk (dense matmuls) ---------------------------------
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))       # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores[:, :, None] * L                       # [B,nc,H,Q,Q]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(x.dtype), xc)
+
+    # ---- chunk states --------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # [B,nc,Q,H]
+    S = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc,
+                   decay_to_end.astype(x.dtype), xc)      # [B,nc,H,N,P]
+
+    # ---- inter-chunk recurrence (short scan over nc) -------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,nc,H]
+
+    def step(hprev, inp):
+        s_c, d_c = inp
+        hnew = hprev * d_c[..., None, None] + s_c
+        return hnew, hprev                                 # emit state ENTERING chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    hT, h_in = xscan(step,
+                        h0.astype(jnp.float32),
+                        (S.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+                         chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                  # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(cum).astype(x.dtype),
+                         h_in.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, t, h, p).astype(x.dtype)
+    return y[:, :t_orig], hT
+
+
+def mamba_forward(params, xin: Array, cfg: ModelConfig,
+                  h0: Array | None = None,
+                  conv0: Array | None = None):
+    """Full-sequence Mamba2 block (post-norm residual handled by caller).
+
+    xin: [B, T, D] (already normed). Returns (out [B,T,D], (h_final, conv_tail)).
+    conv_tail packs the last (K-1) pre-conv values of [x | B | C] on the
+    channel axis (width d_inner + 2N) for decode stitching.
+    """
+    dt_ = xin.dtype
+    b, t, _ = xin.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = xin @ params["w_z"].astype(dt_)
+    xr = xin @ params["w_x"].astype(dt_)
+    Br = xin @ params["w_B"].astype(dt_)
+    Cr = xin @ params["w_C"].astype(dt_)
+    dt_raw = xin @ params["w_dt"].astype(dt_)
+
+    def conv(v, w, bias, c0):
+        if c0 is not None:
+            ext = jnp.concatenate([c0.astype(dt_), v], axis=1)
+            return _causal_conv(ext, w.astype(dt_),
+                                bias.astype(dt_))[:, c0.shape[1]:]
+        return _causal_conv(v, w.astype(dt_), bias.astype(dt_))
+
+    c0x = c0B = c0C = None
+    if conv0 is not None:
+        c0x, c0B, c0C = (conv0[..., :di], conv0[..., di:di + N],
+                         conv0[..., di + N:])
+    xs = jax.nn.silu(conv(xr, params["conv_x"], params["conv_b_x"], c0x))
+    B = jax.nn.silu(conv(Br, params["conv_B"], params["conv_b_B"], c0B))
+    C = jax.nn.silu(conv(Cr, params["conv_C"], params["conv_b_C"], c0C))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                          # [H]
+
+    x_heads = xs.reshape(b, t, H, P)
+    y, hT = ssd_chunked(x_heads, dt, A, B, C, cfg.ssm_chunk, h0)
+    y = y + x_heads * params["D_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, t, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    k = cfg.conv_kernel - 1
+    conv_tail = jnp.concatenate(
+        [xr[:, -k:, :], Br[:, -k:, :], Cr[:, -k:, :]], axis=-1)
+    return out, (hT, conv_tail)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(params, xin: Array, cfg: ModelConfig, cache: dict):
+    """Single-token Mamba2 step. xin: [B, 1, D]. O(1) state update."""
+    dt_ = xin.dtype
+    b = xin.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = xin @ params["w_z"].astype(dt_)
+    xr = xin @ params["w_x"].astype(dt_)
+    Br = xin @ params["w_B"].astype(dt_)
+    Cr = xin @ params["w_C"].astype(dt_)
+    dt_raw = xin @ params["w_dt"].astype(dt_)
+
+    xbc = jnp.concatenate([xr, Br, Cr], axis=-1)          # [B,1,di+2N]
+    conv_buf = jnp.concatenate([cache["conv"].astype(dt_), xbc], axis=1)
+    w = jnp.concatenate([params["conv_x"], params["conv_B"],
+                         params["conv_C"]], axis=-1).astype(dt_)
+    bias = jnp.concatenate([params["conv_b_x"], params["conv_b_B"],
+                            params["conv_b_C"]]).astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_buf, w) + bias
+    xbc_act = jax.nn.silu(conv_out)[:, None, :]
+    xs, B, C = jnp.split(xbc_act, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                   # [B,H]
+
+    x_heads = xs.reshape(b, H, P).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                       # [B,N]
+    Cv = C[:, 0].astype(jnp.float32)
+    hx = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bv, dt, x_heads)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, hx).astype(dt_)
+    y = y + x_heads.astype(dt_) * params["D_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, {"h": hx, "conv": conv_buf[:, 1:, :].astype(cache["conv"].dtype)}

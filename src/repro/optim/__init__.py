@@ -1,0 +1,12 @@
+from repro.optim.sgd import (
+    OptimizerConfig,
+    init_opt_state,
+    apply_update,
+    Hyper,
+)
+from repro.optim.schedule import cosine_schedule, constant_schedule
+
+__all__ = [
+    "OptimizerConfig", "init_opt_state", "apply_update", "Hyper",
+    "cosine_schedule", "constant_schedule",
+]

@@ -1,0 +1,144 @@
+"""Optimizers built for per-layer fused updates.
+
+The TaxoNN engine applies updates *inside* the backward scan, one layer at a
+time (the paper's step-4 fused `W -= alpha * dW`).  The optimizer therefore
+exposes a leafwise ``apply_update(params, grads, state, hyper)`` that works
+on any sub-pytree (a single scanned layer slice or the whole boundary param
+group) — no global gradient tree ever exists on the TaxoNN path.
+
+Kinds:
+  sgd        — stateless (paper's optimizer)
+  momentum   — classic heavy-ball
+  momentum8  — heavy-ball with int8-quantized momentum buffers (per-tensor
+               scale): training-state analogue of the paper's low-bit storage
+  adam       — for baseline comparisons
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "sgd"             # sgd | momentum | momentum8 | adam
+    momentum: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0        # 0 = off; per-leaf clip by global-norm proxy
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    """Traced hyperparameters (lr varies per step; passed into the jit)."""
+    lr: Array
+    step: Array
+
+
+jax.tree_util.register_dataclass(Hyper, data_fields=["lr", "step"], meta_fields=[])
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    if cfg.kind == "sgd":
+        return {}
+    if cfg.kind == "momentum":
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+    if cfg.kind == "momentum8":
+        # rowwise scales (over the last axis): keeps a leading layer axis on
+        # stacked params so the TaxoNN engine can scan optimizer state
+        return {
+            "m_q": jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.int8), params),
+            "m_s": jax.tree.map(
+                lambda w: jnp.ones(w.shape[:-1], jnp.float32), params),
+        }
+    if cfg.kind == "adam":
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _clip(g: Array, limit: float) -> Array:
+    if limit <= 0:
+        return g
+    norm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
+    scale = jnp.minimum(1.0, limit / (norm + 1e-12))
+    return g * scale
+
+
+def apply_update(params, grads, state, hyper: Hyper, cfg: OptimizerConfig):
+    """Leafwise update over an arbitrary sub-pytree. Returns (params, state)."""
+    lr = hyper.lr
+
+    if cfg.kind == "sgd":
+        def upd(w, g):
+            g = _clip(g, cfg.grad_clip).astype(jnp.float32)
+            if cfg.weight_decay:
+                g = g + cfg.weight_decay * w
+            return (w - lr * g).astype(w.dtype)
+        return jax.tree.map(upd, params, grads), state
+
+    if cfg.kind == "momentum":
+        def upd(w, g, m):
+            g = _clip(g, cfg.grad_clip).astype(jnp.float32)
+            if cfg.weight_decay:
+                g = g + cfg.weight_decay * w
+            m_new = cfg.momentum * m + g
+            return (w - lr * m_new).astype(w.dtype), m_new
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m}
+
+    if cfg.kind == "momentum8":
+        def upd(w, g, mq, ms):
+            g = _clip(g, cfg.grad_clip).astype(jnp.float32)
+            if cfg.weight_decay:
+                g = g + cfg.weight_decay * w
+            m = mq.astype(jnp.float32) * ms[..., None]
+            m_new = cfg.momentum * m + g
+            absmax = jnp.max(jnp.abs(m_new), axis=-1)
+            s_new = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+            mq_new = jnp.clip(jnp.round(m_new / s_new[..., None]),
+                              -127, 127).astype(jnp.int8)
+            return (w - lr * m_new).astype(w.dtype), mq_new, s_new
+        out = jax.tree.map(upd, params, grads, state["m_q"], state["m_s"])
+        istuple = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda o: o[0], out, is_leaf=istuple),
+            {
+                "m_q": jax.tree.map(lambda o: o[1], out, is_leaf=istuple),
+                "m_s": jax.tree.map(lambda o: o[2], out, is_leaf=istuple),
+            },
+        )
+
+    if cfg.kind == "adam":
+        t = hyper.step.astype(jnp.float32) + 1.0
+
+        def upd(w, g, m, v):
+            g = _clip(g, cfg.grad_clip).astype(jnp.float32)
+            if cfg.weight_decay:
+                g = g + cfg.weight_decay * w
+            m_new = cfg.momentum * m + (1 - cfg.momentum) * g
+            v_new = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+            mh = m_new / (1 - cfg.momentum ** t)
+            vh = v_new / (1 - cfg.beta2 ** t)
+            return (w - lr * mh / (jnp.sqrt(vh) + cfg.eps)).astype(w.dtype), m_new, v_new
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        istuple = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda o: o[0], out, is_leaf=istuple),
+            {
+                "m": jax.tree.map(lambda o: o[1], out, is_leaf=istuple),
+                "v": jax.tree.map(lambda o: o[2], out, is_leaf=istuple),
+            },
+        )
+
+    raise ValueError(cfg.kind)

@@ -1,0 +1,39 @@
+"""Fixed-point (I,F) quantization for TaxoNN-style low-bitwidth training.
+
+The paper trains in per-layer fixed-point arithmetic: a number format
+``(I, F)`` has ``I`` integer bits, ``F`` fractional bits and one sign bit
+(total bitwidth ``I + F + 1``).  We emulate that arithmetic in float with
+quantize-dequantize + straight-through estimators, so the same compiled
+program serves any bitwidth schedule (bitwidths are runtime data).
+"""
+from repro.quant.fixed_point import (
+    QFormat,
+    quantize,
+    quantize_ste,
+    quantize_stochastic,
+    fxp_resolution,
+    fxp_max,
+    BitSchedule,
+    make_bit_schedule,
+    paper_schedule,
+)
+from repro.quant.compression import (
+    compress_int8,
+    decompress_int8,
+    quantized_allreduce_bytes,
+)
+
+__all__ = [
+    "QFormat",
+    "quantize",
+    "quantize_ste",
+    "quantize_stochastic",
+    "fxp_resolution",
+    "fxp_max",
+    "BitSchedule",
+    "make_bit_schedule",
+    "paper_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "quantized_allreduce_bytes",
+]

@@ -1,0 +1,61 @@
+"""Gradient compression codecs for cross-replica reduction.
+
+TaxoNN's power/area win comes from moving fewer bits per MAC.  On a pod the
+analogous scarce resource is ICI bytes: the per-layer gradient all-reduce.
+We provide an int8 block-scaled codec (4x byte reduction vs f32, 2x vs bf16)
+used by ``dist.collectives.compressed_psum``.
+
+The codec is deterministic and shape-preserving:
+  compress:   f32[N] -> (int8[N], f32[N/B] scales)
+  decompress: exact inverse of the quantization grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BLOCK = 256  # elements per scale block; 1 f32 scale per 256 int8 payloads
+
+
+def _pad_to_block(x: Array) -> tuple[Array, int]:
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.ravel(x)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    return flat, n
+
+
+def compress_int8(x: Array) -> tuple[Array, Array]:
+    """Block-scaled int8 quantization. Returns (payload int8, scales f32)."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale.reshape(-1)
+
+
+def decompress_int8(payload: Array, scales: Array, shape, dtype=jnp.float32) -> Array:
+    blocks = payload.reshape(-1, BLOCK).astype(jnp.float32)
+    x = blocks * scales.reshape(-1, 1)
+    n = 1
+    for d in shape:
+        n *= d
+    return x.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def quantized_allreduce_bytes(num_elements: int, dtype_bytes: int = 4) -> dict:
+    """Napkin accounting of collective bytes: dense vs int8-compressed.
+
+    Used by benchmarks/savings.py to report the Table-IV analogue.
+    """
+    dense = num_elements * dtype_bytes
+    comp = num_elements * 1 + (num_elements // BLOCK + 1) * 4
+    return {
+        "dense_bytes": dense,
+        "compressed_bytes": comp,
+        "reduction": dense / comp,
+    }

@@ -1,0 +1,261 @@
+"""Fixed-point (I,F) emulation with straight-through estimators.
+
+A TaxoNN number format ``(I, F)`` is a signed fixed-point format with ``I``
+integer bits and ``F`` fractional bits (bitwidth ``I + F + 1`` including
+sign).  Representable values are ``k * 2^-F`` for integer
+``k in [-2^(I+F), 2^(I+F) - 1]``.
+
+All quantizers below take ``I`` and ``F`` as *traced values* (int32 scalars
+or arrays), so per-layer bitwidth schedules are runtime data: one compiled
+train step serves every schedule, exactly as one TaxoNN chip serves every
+(I,F) configuration loaded into its registers.
+
+On real TPU hardware, formats with bitwidth <= 8 map onto the int8 MXU path
+and formats with bitwidth <= 16 map onto bf16/int16; this module emulates the
+*values* those paths would produce (round-to-nearest-even or stochastic
+rounding, saturating clip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+IntLike = Union[int, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Static description of a fixed-point format (for configs / docs)."""
+
+    i_bits: int
+    f_bits: int
+
+    @property
+    def bitwidth(self) -> int:
+        return self.i_bits + self.f_bits + 1
+
+    @property
+    def resolution(self) -> float:
+        return 2.0 ** (-self.f_bits)
+
+    @property
+    def max_value(self) -> float:
+        return (2.0 ** (self.i_bits + self.f_bits) - 1) * self.resolution
+
+    def __repr__(self) -> str:  # matches the paper's "(I,F)" notation
+        return f"({self.i_bits},{self.f_bits})"
+
+
+def _pow2_int(bits: IntLike) -> Array:
+    """Exact 2^bits as float32 via integer shift (jnp.exp2 on f32 is computed
+    as exp(x*ln2) on CPU and is NOT exact for integer exponents).
+
+    Valid for 0 <= bits <= 30 (int32 shift); TaxoNN formats are <= 21 bits.
+    """
+    b = jnp.asarray(bits, jnp.int32)
+    return jnp.left_shift(jnp.int32(1), b).astype(jnp.float32)
+
+
+def fxp_resolution(f_bits: IntLike) -> Array:
+    """Quantization step 2^-F, computed exactly from traced F."""
+    return 1.0 / _pow2_int(f_bits)
+
+
+def fxp_max(i_bits: IntLike, f_bits: IntLike) -> Array:
+    """Largest representable magnitude (positive side) of (I,F)."""
+    total = jnp.asarray(i_bits, jnp.int32) + jnp.asarray(f_bits, jnp.int32)
+    return (_pow2_int(total) - 1.0) * fxp_resolution(f_bits)
+
+
+def _quantize_value(x: Array, i_bits: IntLike, f_bits: IntLike) -> Array:
+    """Round-to-nearest-even fixed-point quantization (pure value, no STE)."""
+    x = jnp.asarray(x)
+    step = fxp_resolution(f_bits).astype(x.dtype)
+    total = jnp.asarray(i_bits, jnp.int32) + jnp.asarray(f_bits, jnp.int32)
+    qmax = _pow2_int(total) - 1.0  # integer grid bound, positive side
+    qmin = -_pow2_int(total)
+    k = jnp.clip(jnp.round(x / step), qmin.astype(x.dtype), qmax.astype(x.dtype))
+    return k * step
+
+
+def quantize(x: Array, i_bits: IntLike, f_bits: IntLike) -> Array:
+    """Quantize ``x`` to the (I,F) grid. No gradient definition (use in fwd-only
+    paths or where the surrounding code handles gradients explicitly)."""
+    return _quantize_value(x, i_bits, f_bits)
+
+
+@jax.custom_vjp
+def quantize_ste(x: Array, i_bits: Array, f_bits: Array) -> Array:
+    """Quantize with a straight-through estimator.
+
+    Forward: round-to-nearest-even onto the (I,F) grid with saturation.
+    Backward: identity inside the representable range, zero outside
+    (saturated values carry no gradient — matches hardware clipping).
+    """
+    return _quantize_value(x, i_bits, f_bits)
+
+
+def _ste_fwd(x, i_bits, f_bits):
+    bound = fxp_max(i_bits, f_bits).astype(x.dtype)
+    mask = (jnp.abs(x) <= bound).astype(x.dtype)
+    return _quantize_value(x, i_bits, f_bits), mask
+
+
+def _ste_bwd(mask, g):
+    return (g * mask, None, None)
+
+
+quantize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+@jax.custom_vjp
+def quantize_stochastic(x: Array, i_bits: Array, f_bits: Array, key: Array) -> Array:
+    """Stochastically-rounded quantization with STE backward.
+
+    Stochastic rounding is unbiased: E[q(x)] = x for in-range x.  The paper's
+    low-bit gradient path needs this to keep SGD convergent at F <= 10 —
+    round-to-nearest silently zeroes small gradient mass.
+    """
+    return _stochastic_value(x, i_bits, f_bits, key)
+
+
+def _stochastic_value(x, i_bits, f_bits, key):
+    x = jnp.asarray(x)
+    step = fxp_resolution(f_bits).astype(x.dtype)
+    total = jnp.asarray(i_bits, jnp.int32) + jnp.asarray(f_bits, jnp.int32)
+    qmax = (_pow2_int(total) - 1.0).astype(x.dtype)
+    qmin = (-_pow2_int(total)).astype(x.dtype)
+    scaled = x / step
+    floor = jnp.floor(scaled)
+    frac = scaled - floor
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    k = floor + (u < frac).astype(x.dtype)
+    k = jnp.clip(k, qmin, qmax)
+    return k * step
+
+
+def _stoch_fwd(x, i_bits, f_bits, key):
+    bound = fxp_max(i_bits, f_bits).astype(x.dtype)
+    mask = (jnp.abs(x) <= bound).astype(x.dtype)
+    return _stochastic_value(x, i_bits, f_bits, key), mask
+
+
+def _stoch_bwd(mask, g):
+    return (g * mask, None, None, None)
+
+
+quantize_stochastic.defvjp(_stoch_fwd, _stoch_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer bit schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BitSchedule:
+    """Per-layer (I,F) bitwidths for the three tensor classes the paper
+    quantizes: weights, activations (the cached X_i), and gradients (G, dW).
+
+    Each field is an int32 array of shape [num_layers] so it can be scanned
+    with the layer stack.  ``enabled`` turns quantization off entirely
+    (fp32/bf16 baseline) without recompiling.
+    """
+
+    w_i: Array
+    w_f: Array
+    a_i: Array
+    a_f: Array
+    g_i: Array
+    g_f: Array
+    enabled: Array  # float32 scalar: 1.0 = quantize, 0.0 = passthrough
+
+    @property
+    def num_layers(self) -> int:
+        return int(self.w_i.shape[0])
+
+    def layer(self, idx):
+        """Slice one layer's bitwidths (for use inside a scanned body)."""
+        return BitSchedule(
+            w_i=self.w_i[idx], w_f=self.w_f[idx],
+            a_i=self.a_i[idx], a_f=self.a_f[idx],
+            g_i=self.g_i[idx], g_f=self.g_f[idx],
+            enabled=self.enabled,
+        )
+
+
+jax.tree_util.register_dataclass(
+    BitSchedule,
+    data_fields=["w_i", "w_f", "a_i", "a_f", "g_i", "g_f", "enabled"],
+    meta_fields=[],
+)
+
+
+def make_bit_schedule(
+    num_layers: int,
+    weight: tuple = (2, 12),
+    act: tuple = (4, 10),
+    grad: tuple = (2, 12),
+    *,
+    ramp: bool = True,
+    enabled: bool = True,
+) -> BitSchedule:
+    """Build a per-layer schedule.
+
+    ``ramp=True`` applies the paper's observation that later layers need more
+    fractional bits: F ramps by +2 over the final quarter of the stack, and
+    the last layer gets +1 integer bit (mirrors the (3,10) / (4,12) tails in
+    Table I).
+    """
+    import numpy as np
+
+    def per_layer(base_i, base_f):
+        i = np.full((num_layers,), base_i, np.int32)
+        f = np.full((num_layers,), base_f, np.int32)
+        if ramp and num_layers > 1:
+            tail = max(1, num_layers // 4)
+            f[-tail:] += 2
+            i[-1] += 1
+        return jnp.asarray(i), jnp.asarray(f)
+
+    w_i, w_f = per_layer(*weight)
+    a_i, a_f = per_layer(*act)
+    g_i, g_f = per_layer(*grad)
+    return BitSchedule(
+        w_i=w_i, w_f=w_f, a_i=a_i, a_f=a_f, g_i=g_i, g_f=g_f,
+        enabled=jnp.float32(1.0 if enabled else 0.0),
+    )
+
+
+def paper_schedule(dataset: str, num_layers: int = 5) -> BitSchedule:
+    """The exact per-layer (I,F) design points from Table I of the paper,
+    tiled/interpolated if num_layers != 5."""
+    import numpy as np
+
+    table = {
+        "mnist": [(2, 12), (2, 12), (2, 12), (1, 12), (3, 10)],
+        "cifar10": [(2, 10), (2, 11), (1, 10), (1, 13), (2, 13)],
+        "svhn": [(1, 12), (2, 12), (2, 12), (2, 11), (4, 12)],
+    }
+    pts = table[dataset.lower()]
+    idx = np.minimum(
+        (np.arange(num_layers) * len(pts)) // max(num_layers, 1), len(pts) - 1
+    )
+    i = jnp.asarray([pts[j][0] for j in idx], jnp.int32)
+    f = jnp.asarray([pts[j][1] for j in idx], jnp.int32)
+    return BitSchedule(
+        w_i=i, w_f=f, a_i=i, a_f=f, g_i=i, g_f=f, enabled=jnp.float32(1.0)
+    )
+
+
+def maybe_quantize(x: Array, i_bits, f_bits, enabled: Array) -> Array:
+    """Blend between quantized and passthrough based on the runtime flag.
+
+    ``enabled`` is a float scalar (0.0/1.0); the select keeps everything
+    traceable with zero recompiles when toggling quantization.
+    """
+    q = quantize_ste(x, i_bits, f_bits)
+    return enabled * q + (1.0 - enabled) * x

@@ -1,0 +1,10 @@
+from repro.serving.engine import (
+    init_decode_state,
+    decode_step,
+    prefill,
+    greedy_generate,
+)
+from repro.serving.scheduler import BatchScheduler, Request
+
+__all__ = ["init_decode_state", "decode_step", "prefill", "greedy_generate",
+           "BatchScheduler", "Request"]

@@ -1,0 +1,209 @@
+"""Serving engine: prefill + single-token decode against per-layer caches.
+
+Cache layout is stacked on a leading layer axis so the decode step is a
+single ``lax.scan`` over (layer params, layer cache) — the serving analogue
+of the training stacks.  Cache kinds per family:
+
+  dense/moe/vlm : GQA KV ring buffers (ring = SWA window when configured —
+                  the sliding window makes the cache O(window), a serving
+                  memory win) or MLA compressed c_kv/k_pe latents.
+  ssm           : O(1) SSD state + conv tail — this is why the long_500k
+                  cell is SSM/hybrid-only.
+  hybrid        : per-group attn KV (the weight-tied block still needs
+                  per-application caches) + per-layer mamba states.
+  encdec        : decoder self-attn KV + precomputed cross-attn K/V.
+
+Quantized (int8-scaled) KV storage is available via ``cache_dtype`` — the
+paper's low-bitwidth discipline applied to serving state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.api import constrain
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import lm
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.util.scan import xscan
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Cache init (zeros; shapes only — used by input_specs for the dry-run)
+# ---------------------------------------------------------------------------
+
+def _stack_cache(n: int, one_fn):
+    one = one_fn()
+    return jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), one)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        caches = _stack_cache(
+            cfg.num_layers, lambda: B.init_block_cache(cfg, batch, max_len,
+                                                       cache_dtype))
+    elif fam == "ssm":
+        caches = _stack_cache(
+            cfg.num_layers, lambda: S.init_mamba_cache(cfg, batch, cache_dtype))
+    elif fam == "hybrid":
+        G, K = lm.hybrid_groups(cfg)
+        attn = _stack_cache(G, lambda: L.init_kv_cache(cfg, batch, max_len,
+                                                       cache_dtype))
+        mamba = jax.tree.map(
+            lambda x: jnp.zeros((G, K) + x.shape, x.dtype),
+            S.init_mamba_cache(cfg, batch, cache_dtype))
+        caches = {"attn": attn, "mamba": mamba}
+    elif fam == "encdec":
+        caches = _stack_cache(
+            cfg.num_layers,
+            lambda: B.init_decoder_cache(cfg, batch, max_len, cfg.encoder_seq,
+                                         cache_dtype))
+    else:
+        raise ValueError(fam)
+    return {"caches": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, state: dict, tokens: Array):
+    """One decode step. tokens: [B, 1] int32. Returns (logits [B,V], state)."""
+    fam = cfg.family
+    dt = lm.compute_dtype(cfg)
+    pos = state["pos"]
+    caches = state["caches"]
+
+    x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if fam == "encdec":
+        x = x + lm._sinusoid(1, cfg.d_model, offset=pos).astype(dt)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            p, c = xs
+            h2, c2 = B.transformer_block_decode(p, h, cfg, c, pos)
+            return h2, c2
+        x, new_caches = xscan(body, x, (params["blocks"], caches))
+
+    elif fam == "ssm":
+        def body(h, xs):
+            p, c = xs
+            h2, c2 = B.mamba_block_decode(p, h, cfg, c, pos)
+            return h2, c2
+        x, new_caches = xscan(body, x, (params["blocks"], caches))
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(h, xs):
+            gp, ac, mc = xs
+            h, ac2 = B.transformer_block_decode(shared, h, cfg, ac, pos)
+
+            def inner(hh, ys):
+                p, c = ys
+                h2, c2 = B.mamba_block_decode(p, hh, cfg, c, pos)
+                return h2, c2
+            h, mc2 = xscan(inner, h, (gp, mc))
+            return h, (ac2, mc2)
+        x, (new_attn, new_mamba) = xscan(
+            group, x, (params["blocks"], caches["attn"], caches["mamba"]))
+        new_caches = {"attn": new_attn, "mamba": new_mamba}
+
+    elif fam == "encdec":
+        def body(h, xs):
+            p, c = xs
+            h2, c2 = B.decoder_block_decode(p, h, cfg, c, pos)
+            return h2, c2
+        x, new_caches = xscan(body, x, (params["blocks"], caches))
+
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    w = lm.head_weight(params, cfg)
+    logits = constrain(
+        (x[:, 0, :] @ w.astype(x.dtype)).astype(jnp.float32), "btv")
+    return logits, {"caches": new_caches, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + seed caches
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the full-context forward, returning (last_logits, decode state)."""
+    fam = cfg.family
+    x, positions = lm.embed_input(params, cfg, batch)
+    t = x.shape[1]
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, p):
+            h2, c = B.transformer_block_prefill(p, h, cfg, positions, max_len,
+                                                cache_dtype)
+            return h2, c
+        x, caches = xscan(body, x, params["blocks"])
+
+    elif fam == "ssm":
+        def body(h, p):
+            h2, c = B.mamba_block_prefill(p, h, cfg, positions, cache_dtype)
+            return h2, c
+        x, caches = xscan(body, x, params["blocks"])
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(h, gp):
+            h, ac = B.transformer_block_prefill(shared, h, cfg, positions,
+                                                max_len, cache_dtype)
+
+            def inner(hh, p):
+                h2, c = B.mamba_block_prefill(p, hh, cfg, positions,
+                                              cache_dtype)
+                return h2, c
+            h, mc = xscan(inner, h, gp)
+            return h, (ac, mc)
+        x, (attn_c, mamba_c) = xscan(group, x, params["blocks"])
+        caches = {"attn": attn_c, "mamba": mamba_c}
+
+    elif fam == "encdec":
+        enc_out = lm.encode(params, cfg, batch["frames"])
+
+        def body(h, p):
+            h2, c = B.decoder_block_prefill(p, h, cfg, positions, enc_out,
+                                            max_len, cache_dtype)
+            return h2, c
+        x, caches = xscan(body, x, params["blocks"])
+
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    w = lm.head_weight(params, cfg)
+    logits = (x[:, -1, :] @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"caches": caches, "pos": jnp.asarray(t, jnp.int32)}
+
+
+def greedy_generate(params, cfg: ModelConfig, batch: dict, max_len: int,
+                    num_steps: int, cache_dtype=jnp.bfloat16):
+    """Prefill + greedy decode loop (reference serving driver)."""
+    logits, state = prefill(params, cfg, batch, max_len, cache_dtype)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(num_steps):
+        out.append(tok)
+        logits, state = decode_step(params, cfg, state, tok)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,101 @@
+"""Slot-based continuous batching for the decode loop.
+
+A fixed-size batch of decode slots runs every step; finished or empty slots
+are refilled from a FIFO of pending requests (prefill writes the new
+request's cache into the slot).  This is the standard continuous-batching
+scheme adapted to JAX's static shapes: the batch dimension is fixed, slot
+occupancy is a host-side mask, and per-slot positions live in the cache
+state.
+
+The scheduler is host-side control logic (fault-tolerant: its queue state is
+trivially checkpointable); the device-side steps stay pure and jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [T] int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Drives (prefill_fn, decode_fn) over a fixed slot batch.
+
+    prefill_fn(tokens [1,T]) -> (logits [1,V], slot_state)
+    decode_fn(state, tokens [B,1]) -> (logits [B,V], state)
+    merge_fn(state, slot_state, slot_idx) -> state   (writes one slot's cache)
+    """
+
+    def __init__(self, num_slots: int, prefill_fn: Callable,
+                 decode_fn: Callable, merge_fn: Callable, init_state,
+                 eos_id: int = -1):
+        self.num_slots = num_slots
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.merge_fn = merge_fn
+        self.state = init_state
+        self.eos_id = eos_id
+        self.pending: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.next_tokens = np.zeros((num_slots, 1), np.int32)
+        self.steps_run = 0
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.num_slots):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.popleft()
+                logits, slot_state = self.prefill_fn(req.prompt[None, :])
+                self.state = self.merge_fn(self.state, slot_state, i)
+                tok = int(np.argmax(np.asarray(logits)[0]))
+                req.generated.append(tok)
+                self.next_tokens[i, 0] = tok
+                self.slots[i] = req
+
+    def step(self) -> int:
+        """One decode step over the batch. Returns #active slots."""
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.state = self.decode_fn(
+            self.state, jnp.asarray(self.next_tokens))
+        toks = np.argmax(np.asarray(logits), axis=-1)
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.generated.append(tok)
+            self.next_tokens[i, 0] = tok
+            if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None
+        self.steps_run += 1
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            for r in list(self.slots) + list(self.pending):
+                if r is not None:
+                    seen[r.uid] = r
+            if self.step() == 0 and not self.pending:
+                break
+        for r in seen.values():
+            if r.done:
+                finished.append(r)
+        return finished

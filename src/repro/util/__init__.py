@@ -1,0 +1,3 @@
+from repro.util.scan import xscan, unrolled_scans_ctx
+
+__all__ = ["xscan", "unrolled_scans_ctx"]

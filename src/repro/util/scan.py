@@ -1,0 +1,35 @@
+"""Scan wrapper with a context-controlled unroll mode.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, not x trip-count,
+so rolled ``lax.scan`` silently under-reports FLOPs/bytes/collectives by the
+scan length.  All layer/chunk scans in this codebase go through ``xscan``;
+the dry-run's cost pass re-lowers reduced-depth configs under
+``unrolled_scans_ctx()`` so every op is materialised and counted, then
+extrapolates linearly in depth (see launch/dryrun.py).
+
+Production lowering keeps scans rolled (small HLO, fast 512-device
+compiles); only the cost pass unrolls.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+from jax import lax
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unrolled_scans_ctx(on: bool = True):
+    token = _UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def xscan(f, init, xs, length=None, reverse=False):
+    return lax.scan(f, init, xs, length=length, reverse=reverse,
+                    unroll=True if _UNROLL.get() else 1)

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one TaxoNN train step on CPU, asserting shapes + finiteness.
+
+The FULL assigned configs are exercised via the dry-run only (see
+launch/dryrun.py); these reduced twins keep every family-specific code path
+(MLA, MoE routing, SSD, shared-attn groups, enc-dec, VLM concat) covered by
+fast CPU tests.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, input_specs, SHAPE_CELLS
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.models import lm
+from repro.models.config import ModelConfig, cell_is_applicable
+from repro.optim import Hyper, OptimizerConfig
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Shrink to test scale, preserving family + feature flags."""
+    changes = dict(
+        num_layers=min(cfg.num_layers, 4 if cfg.family != "hybrid" else 4),
+        d_model=64,
+        vocab_size=256,
+        compute_dtype="float32",
+    )
+    if cfg.num_heads:
+        kv = max(1, min(cfg.num_kv_heads, 2))
+        heads = 4 if cfg.num_heads >= 4 else cfg.num_heads
+        if cfg.num_kv_heads == cfg.num_heads:
+            kv = heads
+        changes.update(num_heads=heads, num_kv_heads=kv, head_dim=16)
+    if cfg.d_ff:
+        changes.update(d_ff=128)
+    if cfg.family == "moe":
+        changes.update(num_experts=4,
+                       experts_per_token=min(cfg.experts_per_token, 2),
+                       moe_d_ff=32)
+    if cfg.use_mla:
+        changes.update(kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                       v_head_dim=16)
+    if cfg.family in ("ssm", "hybrid"):
+        changes.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.family == "hybrid":
+        changes.update(num_layers=4, attn_every=2)
+    if cfg.family == "encdec":
+        changes.update(num_encoder_layers=2, encoder_seq=16)
+    if cfg.family == "vlm":
+        changes.update(num_patches=8)
+    if cfg.swa_window:
+        changes.update(swa_window=16)
+    return dataclasses.replace(cfg, **changes)
+
+
+def reduced_batch(cfg: ModelConfig, b=2, t=24, key=0):
+    ks = jax.random.split(jax.random.key(key), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, t), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (b, t), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[3], (b, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(arch):
+    full = get_config(arch)
+    cfg = reduce_config(full)
+    assert cfg.family == full.family
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = reduced_batch(cfg)
+
+    # forward: hidden states have the right shape and are finite
+    x = lm.forward_hidden(params, cfg, batch)
+    t_expect = batch["tokens"].shape[1] + (
+        cfg.num_patches if cfg.family == "vlm" else 0)
+    assert x.shape == (2, t_expect, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(x, np.float32)))
+
+    # one TaxoNN train step with the paper-style bit schedule enabled
+    ocfg = OptimizerConfig(kind="sgd")
+    step = jax.jit(make_train_step(cfg, QuantPolicy(grad_scale=16.0), ocfg))
+    state = init_train_state(params, ocfg)
+    bits = default_bits(cfg, enabled=True)
+    hyper = Hyper(lr=jnp.float32(0.01), step=jnp.int32(0))
+    new_params, _, metrics = step(params, state, batch, hyper, bits)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a - b_))), params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_specs_are_lazy(arch):
+    """Full configs must be constructible as specs without any allocation."""
+    from repro.configs import param_specs
+    cfg = get_config(arch)
+    specs = param_specs(cfg)
+    n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs))
+    # sanity: assigned sizes are in the expected ballpark
+    expected = cfg.param_count()
+    assert abs(n - expected) / expected < 0.05, (arch, n, expected)
+    for cell in SHAPE_CELLS:
+        if not cell_is_applicable(cfg, cell):
+            continue
+        sp = input_specs(cfg, cell.name)
+        assert all(hasattr(s, "shape") for s in jax.tree.leaves(sp))
+
+
+def test_param_counts_match_model_class():
+    """Rough scale check against public parameter counts."""
+    expected_b = {
+        "h2o-danube-3-4b": (3.0, 5.0),
+        "gemma-7b": (7.5, 9.5),       # 8.5B with its 256k embed
+        "qwen1.5-0.5b": (0.4, 0.7),
+        "yi-34b": (30.0, 38.0),
+        "deepseek-v2-lite-16b": (14.0, 18.0),
+        "mixtral-8x7b": (42.0, 50.0),
+        "whisper-tiny": (0.02, 0.06),
+        "mamba2-370m": (0.3, 0.45),
+        "llava-next-mistral-7b": (6.5, 8.0),
+        "zamba2-2.7b": (2.2, 3.2),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"

@@ -1,0 +1,154 @@
+"""Fault-tolerance substrate: checkpoint atomicity, resume, elastic reshard,
+deterministic data pipeline, straggler mitigation, compressed collectives."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (AsyncCheckpointer, latest_step, restore_checkpoint,
+                        save_checkpoint)
+from repro.data import (StragglerTolerantLoader, SyntheticClassificationDataset,
+                        SyntheticLMDataset)
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 7, t, extra={"note": "hi"})
+    assert latest_step(tmp_path) == 7
+    restored, step, extra = restore_checkpoint(tmp_path, t)
+    assert step == 7 and extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    t = tree()
+    for s in range(6):
+        save_checkpoint(tmp_path, s, t, keep_n=3)
+    kept = sorted(p.name for p in tmp_path.iterdir()
+                  if p.name.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+    assert latest_step(tmp_path) == 5
+
+
+def test_checkpoint_crash_leaves_no_corruption(tmp_path):
+    """A stale tmp dir (simulated crash) must not break save/restore."""
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    stale = tmp_path / "step_00000002.tmp-9999"
+    stale.mkdir()
+    (stale / "garbage").write_text("x")
+    save_checkpoint(tmp_path, 2, t)
+    restored, step, _ = restore_checkpoint(tmp_path, t)
+    assert step == 2
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.ones((5,), jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(tmp_path, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    t = tree()
+    ck.save(3, t)
+    ck.wait()
+    assert latest_step(tmp_path) == 3
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Save replicated, restore with an explicit sharding on a 1-dev mesh
+    (the reshard path: placement decided at restore time)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(tmp_path, 1, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _, _ = restore_checkpoint(tmp_path, t, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(t["w"]))
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    ds_a = SyntheticLMDataset(100, 16, 8, seed=1, shard_id=0, num_shards=2)
+    ds_b = SyntheticLMDataset(100, 16, 8, seed=1, shard_id=0, num_shards=2)
+    ds_c = SyntheticLMDataset(100, 16, 8, seed=1, shard_id=1, num_shards=2)
+    b1, b2, b3 = ds_a.batch_at(5), ds_b.batch_at(5), ds_c.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # resume-exact
+    assert not np.array_equal(b1["tokens"], b3["tokens"])      # shards differ
+    assert b1["tokens"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_lm_data_is_learnable():
+    """The Markov stream must be compressible (labels mostly follow the
+    deterministic map) — otherwise convergence benchmarks are meaningless."""
+    ds = SyntheticLMDataset(100, 64, 4, seed=0, noise=0.1)
+    b = ds.batch_at(0)
+    pred = (b["tokens"] * ds.a + ds.b) % ds.vocab
+    agreement = float(np.mean(pred == b["labels"]))
+    assert agreement > 0.8
+
+
+def test_straggler_loader_substitutes_on_deadline():
+    calls = {"n": 0}
+
+    def slow_fetch(step):
+        calls["n"] += 1
+        if step == 2:
+            time.sleep(1.0)  # straggling host
+        return {"x": np.full((2,), step)}
+
+    loader = StragglerTolerantLoader(slow_fetch, deadline_s=0.25, prefetch=1)
+    try:
+        got0 = loader.get(0)
+        got1 = loader.get(1)
+        t0 = time.time()
+        got2 = loader.get(2)  # producer stalled -> substitute, within deadline
+        elapsed = time.time() - t0
+        assert elapsed < 0.9
+        assert loader.skips >= 1
+    finally:
+        loader.close()
+
+
+def test_classification_dataset_separable():
+    ds = SyntheticClassificationDataset(input_dim=32, num_classes=4,
+                                        n_train=512, n_test=128, noise=0.2)
+    x, y = ds.test
+    # nearest-template classification should be near-perfect at low noise
+    pred = np.argmax(x @ ds.templates.T, axis=1)
+    assert np.mean(pred == y) > 0.95
+
+
+def test_compressed_psum_matches_dense():
+    from repro.dist.collectives import compressed_psum_tree, dense_psum_tree
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((64, 8)),
+                          jnp.float32)}
+    dense = dense_psum_tree(g, mesh, ("data",))
+    comp = compressed_psum_tree(g, mesh, ("data",))
+    # single replica: compression error only
+    err = np.abs(np.asarray(dense["w"]) - np.asarray(comp["w"]))
+    tol = np.abs(np.asarray(g["w"])).max() / 127.0
+    assert err.max() <= tol + 1e-6

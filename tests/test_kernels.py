@@ -1,0 +1,175 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles, sweeping
+shapes, block sizes, dtypes, activation kinds and bit formats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.fxp_matmul import fxp_matmul
+from repro.kernels.sgd_dw_update import sgd_dw_update
+from repro.kernels.ops import bp_gstep_op, fxp_matmul_op, sgd_dw_update_op
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.key(key), shape) * scale).astype(dtype)
+
+
+SHAPES_MM = [
+    (16, 16, 16, 8, 8, 8),      # multi-block every dim
+    (32, 16, 48, 16, 16, 16),   # rectangular
+    (8, 8, 8, 8, 8, 8),         # single block
+    (64, 32, 16, 16, 8, 16),    # wide M
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", SHAPES_MM)
+@pytest.mark.parametrize("act", ["identity", "relu"])
+def test_fxp_matmul_blocks(m, k, n, bm, bk, bn, act):
+    x = rand(1, (m, k))
+    w = rand(2, (k, n))
+    got = fxp_matmul(x, w, act=act, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.fxp_matmul_ref(x, w, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [((2, 4), (1, 6), (3, 4)),
+                                  ((4, 10), (2, 12), (4, 10)),
+                                  ((6, 8), (4, 8), None)])
+def test_fxp_matmul_bit_formats(bits):
+    xa, wb, ob = bits
+    x = rand(3, (16, 24), scale=2.0)
+    w = rand(4, (24, 16), scale=0.5)
+    got = fxp_matmul(x, w, xa_bits=xa, w_bits=wb, out_bits=ob,
+                     bm=8, bn=8, bk=8, interpret=True)
+    want = ref.fxp_matmul_ref(x, w, xa_bits=xa, w_bits=wb, out_bits=ob)
+    # blocked accumulation reorders float adds: a value landing on a .5-ulp
+    # tie of the OUTPUT grid may round to the neighbouring step -> tolerance
+    # of one output-resolution step
+    atol = (2.0 ** -ob[1]) if ob is not None else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fxp_matmul_dtypes(dtype):
+    x = rand(5, (16, 16), dtype)
+    w = rand(6, (16, 16), dtype)
+    got = fxp_matmul(x, w, bm=8, bn=8, bk=8, interpret=True)
+    want = ref.fxp_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("act", ["relu", "sigmoid", "tanh", "silu"])
+@pytest.mark.parametrize("t,din,dout,bm,bn,bk", [
+    (16, 24, 32, 8, 8, 16),
+    (32, 16, 16, 16, 16, 8),
+    (8, 8, 8, 8, 8, 8),
+])
+def test_bp_gstep(act, t, din, dout, bm, bn, bk):
+    g = rand(7, (t, dout), scale=0.5)
+    w = rand(8, (din, dout))
+    z = rand(9, (t, din), scale=2.0)
+    got = bp_gstep(g, w, z, act=act, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.bp_gstep_ref(g, w, z, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_bp_gstep_matches_autodiff():
+    """Paper Eq. 8 on a two-layer chain: G_i = (G_{i+1} @ W_{i+1}^T) * f'_i,
+    where G_{i+1} already carries f'_{i+1} (Eq. 6).  G_1 from the kernel must
+    equal the true dLoss/dZ_1 from autodiff."""
+    t, d1, d2 = 16, 16, 16
+    z1 = rand(10, (t, d1))           # layer-1 pre-activation
+    w2 = rand(11, (d1, d2))
+    g2_seed = rand(12, (t, d2))      # dLoss/dY_2
+
+    def loss_of_z1(z):
+        y1 = jax.nn.relu(z)
+        z2 = y1 @ w2
+        y2 = jax.nn.relu(z2)
+        return jnp.sum(y2 * g2_seed)
+
+    want = jax.grad(loss_of_z1)(z1)  # = dLoss/dZ_1 = G_1
+
+    z2 = jax.nn.relu(z1) @ w2
+    g2 = g2_seed * (z2 > 0)          # Eq. 6: G_2 = dE/dY_2 * f'_2
+    got = bp_gstep(g2, w2, z1, g_bits=None, act="relu",
+                   bm=8, bn=8, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,din,dout,bm,bn,bk", [
+    (16, 24, 32, 8, 16, 8),
+    (64, 16, 16, 8, 8, 16),
+])
+@pytest.mark.parametrize("w_bits", [None, (2, 12)])
+def test_sgd_dw_update(t, din, dout, bm, bn, bk, w_bits):
+    x = rand(13, (t, din))
+    g = rand(14, (t, dout), scale=0.1)
+    w = rand(15, (din, dout))
+    got = sgd_dw_update(x, g, w, 0.05, w_bits=w_bits,
+                        bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.sgd_dw_update_ref(x, g, w, 0.05, w_bits=w_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sgd_dw_update_is_true_sgd_step():
+    """Kernel == loss-gradient SGD step for L = <G, X@W>."""
+    t, din, dout = 32, 16, 8
+    x = rand(16, (t, din))
+    g = rand(17, (t, dout))
+    w = rand(18, (din, dout))
+    lr = 0.1
+    grad = jax.grad(lambda wv: jnp.sum((x @ wv) * g))(w)
+    want = w - lr * grad
+    got = sgd_dw_update(x, g, w, lr, bm=8, bn=8, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mexp=st.integers(3, 5), kexp=st.integers(3, 5), nexp=st.integers(3, 5),
+    seed=st.integers(0, 1000),
+)
+def test_fxp_matmul_property_shapes(mexp, kexp, nexp, seed):
+    """Property sweep: random pow2 shapes, random blocks dividing them."""
+    m, k, n = 2 ** mexp, 2 ** kexp, 2 ** nexp
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    got = fxp_matmul(x, w, bm=min(8, m), bn=min(8, n), bk=min(8, k),
+                     interpret=True)
+    want = ref.fxp_matmul_ref(x, w)
+    # one output-grid step (F_out=10): accumulation-order rounding ties
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2.0 ** -10, rtol=1e-5)
+
+
+def test_ops_wrappers_jit():
+    x = rand(20, (32, 48))
+    w = rand(21, (48, 16))
+    got = fxp_matmul_op(x, w)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.fxp_matmul_ref(x, w)),
+                               atol=1e-5, rtol=1e-5)
+    g = rand(22, (32, 16), scale=0.2)
+    z = rand(23, (32, 48))
+    got2 = bp_gstep_op(g, w, z)
+    np.testing.assert_allclose(np.asarray(got2),
+                               np.asarray(ref.bp_gstep_ref(g, w, z)),
+                               atol=1e-5, rtol=1e-5)
+    got3 = sgd_dw_update_op(z, g, w, 0.01)
+    np.testing.assert_allclose(np.asarray(got3),
+                               np.asarray(ref.sgd_dw_update_ref(z, g, w, 0.01)),
+                               atol=1e-5, rtol=1e-5)

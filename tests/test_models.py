@@ -1,0 +1,231 @@
+"""Model substrate tests: layer oracles, family forwards, gradient flow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm, layers as L, ssm as S
+from repro.models.config import ModelConfig
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+V = 128
+
+
+def tiny(family="dense", **kw):
+    base = dict(
+        name=f"t-{family}", family=family, num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=V,
+        compute_dtype="float32",
+    )
+    if family == "moe":
+        base.update(num_kv_heads=4, d_ff=0, num_experts=4, experts_per_token=2,
+                    num_shared_experts=1, moe_d_ff=48)
+    if family == "ssm":
+        base.update(num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=16,
+                    ssm_head_dim=8, ssm_chunk=16)
+    if family == "hybrid":
+        base.update(num_layers=4, num_kv_heads=4, ssm_state=16, ssm_head_dim=8,
+                    ssm_chunk=16, attn_every=2)
+    if family == "encdec":
+        base.update(num_kv_heads=4, num_encoder_layers=2, encoder_seq=20,
+                    use_rope=False, norm_kind="layernorm", mlp_kind="gelu")
+    if family == "vlm":
+        base.update(num_patches=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def make_batch(cfg, b=2, t=64, key=0):
+    ks = jax.random.split(jax.random.key(key), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, t), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (b, t), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (b, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(ks[3], (b, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+FAMILIES = ["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_forward_and_grad_finite(family):
+    cfg = tiny(family)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        assert np.all(np.isfinite(np.asarray(g))), f"non-finite grad at {path}"
+    # embedding must receive gradient (checks the whole chain is connected)
+    assert float(jnp.abs(grads["embed"]).sum()) > 0
+
+
+def test_chunked_attention_matches_full():
+    """Online-softmax scan attention == full softmax attention."""
+    cfg = tiny("dense", swa_window=None)
+    key = jax.random.key(1)
+    b, t, h, hd = 2, 128, 4, 8
+    q, k, v = (jax.random.normal(ks, (b, t, h, hd)) for ks in jax.random.split(key, 3))
+    mask = L._attn_mask(t, t, True, None)
+    full = L._sdpa_full(q, k, v, mask, hd ** -0.5)
+    import repro.models.layers as layers_mod
+    old = layers_mod.ATTN_KV_BLOCK
+    layers_mod.ATTN_KV_BLOCK = 32  # force multiple blocks
+    try:
+        chunked = L._sdpa_chunked(q, k, v, True, None, hd ** -0.5)
+    finally:
+        layers_mod.ATTN_KV_BLOCK = old
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_swa_matches_full():
+    key = jax.random.key(2)
+    b, t, h, hd, w = 1, 96, 2, 8, 24
+    q, k, v = (jax.random.normal(ks, (b, t, h, hd)) for ks in jax.random.split(key, 3))
+    mask = L._attn_mask(t, t, True, w)
+    full = L._sdpa_full(q, k, v, mask, hd ** -0.5)
+    import repro.models.layers as layers_mod
+    old = layers_mod.ATTN_KV_BLOCK
+    layers_mod.ATTN_KV_BLOCK = 16
+    try:
+        chunked = L._sdpa_chunked(q, k, v, True, w, hd ** -0.5)
+    finally:
+        layers_mod.ATTN_KV_BLOCK = old
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """Chunked SSD == step-by-step h_t = exp(dt*A) h + dt*B x recurrence."""
+    key = jax.random.key(3)
+    b, t, h, p, n = 2, 32, 3, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, t, n))
+    Cm = jax.random.normal(ks[4], (b, t, n))
+
+    y_chunk, hT = S.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+
+    # naive reference
+    hstate = np.zeros((b, h, n, p))
+    ys = np.zeros((b, t, h, p))
+    xn, dtn, An, Bn, Cn = map(np.asarray, (x, dt, A, Bm, Cm))
+    for i in range(t):
+        decay = np.exp(dtn[:, i] * An)  # [b,h]
+        hstate = hstate * decay[:, :, None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", Bn[:, i], dtn[:, i], xn[:, i])
+        ys[:, i] = np.einsum("bn,bhnp->bhp", Cn[:, i], hstate)
+    np.testing.assert_allclose(np.asarray(y_chunk), ys, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), hstate, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_initial_state_stitching():
+    """Running two halves with carried state == running the full sequence."""
+    key = jax.random.key(4)
+    b, t, h, p, n = 1, 32, 2, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, t, n))
+    Cm = jax.random.normal(ks[4], (b, t, n))
+    y_full, h_full = S.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    m = t // 2
+    y1, h1 = S.ssd_chunked(x[:, :m], dt[:, :m], A, Bm[:, :m], Cm[:, :m], chunk=8)
+    y2, h2 = S.ssd_chunked(x[:, m:], dt[:, m:], A, Bm[:, m:], Cm[:, m:], chunk=8,
+                           h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, :m]), np.asarray(y1),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_full[:, m:]), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rope_rotation_property():
+    """RoPE: relative-position property <q_i, k_j> depends only on i-j."""
+    hd = 8
+    q = jax.random.normal(jax.random.key(5), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.key(6), (1, 1, 1, hd))
+
+    def dot_at(pi, pj):
+        qi = L.apply_rope(q, jnp.array([[pi]]), 10_000.0)
+        kj = L.apply_rope(k, jnp.array([[pj]]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(12, 10), abs=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), abs=1e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= E/K (full capacity) MoE output must equal the
+    dense-per-token expert mixture (no drops)."""
+    cfg = tiny("moe", capacity_factor=4.0)  # C >= n*K/E * 4: no drops
+    key = jax.random.key(7)
+    p = L.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.key(8), (2, 16, cfg.d_model))
+    out, aux = L.moe(p, x, cfg)
+
+    # dense reference: every token through its top-k experts
+    tokens = np.asarray(x.reshape(-1, cfg.d_model))
+    logits = tokens @ np.asarray(p["router"])
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = np.asarray(top_p / top_p.sum(-1, keepdims=True))
+    top_e = np.asarray(top_e)
+    wg, wu, wd = map(np.asarray, (p["w_gate"], p["w_up"], p["w_down"]))
+
+    def silu(v):
+        return v / (1 + np.exp(-v))
+
+    ref = np.zeros_like(tokens)
+    for i in range(tokens.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = top_e[i, j]
+            h = silu(tokens[i] @ wg[e]) * (tokens[i] @ wu[e])
+            ref[i] += top_p[i, j] * (h @ wd[e])
+    sh = p["shared"]
+    ref += (silu(tokens @ np.asarray(sh["w_gate"])) * (tokens @ np.asarray(sh["w_up"]))) @ np.asarray(sh["w_down"])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model), ref,
+                               atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0
+
+
+def test_vlm_loss_ignores_patches():
+    cfg = tiny("vlm")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, t=32)
+    loss, _ = lm.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    # hidden slice: [B, Np + T] -> text part starts at Np
+    x = lm.forward_hidden(params, cfg, batch)
+    assert x.shape[1] == cfg.num_patches + 32
+
+
+def test_ce_loss_chunking_invariance():
+    """Chunked CE == unchunked CE regardless of chunk size."""
+    cfg = tiny("dense", logit_chunk=16)
+    cfg_big = tiny("dense", logit_chunk=4096)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, t=48)  # not divisible by 16*2 -> tests padding
+    l1, _ = lm.loss_fn(params, cfg, batch)
+    l2, _ = lm.loss_fn(params, cfg_big, batch)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+
+
+def test_param_count_estimate_close():
+    for family in FAMILIES:
+        cfg = tiny(family)
+        params = lm.init_params(jax.random.key(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.15, (family, est, actual)

@@ -1,0 +1,207 @@
+"""§Perf options are function-preserving (subprocess tests on small meshes).
+
+Each option changes sharding/layout/scheduling, never math:
+  pad_heads      — dead-head allocation, masked wo (exact)
+  seq_parallel   — residual-stream constraint only (exact)
+  moe_rowcombine — shard_map expert path == pjit expert path (exact)
+  ce_bf16        — bf16 CE head (approximate: loss tolerance)
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 2, timeout=600):
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT/'src'}:{ROOT/'tests'}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import AxisType
+from repro.dist.api import (perf_options_ctx, activation_sharding_ctx,
+                            make_default_rules)
+from repro.models import lm
+from test_models import tiny, make_batch
+jax.config.update("jax_default_matmul_precision", "highest")
+
+def loss_with(cfg, params, batch, opts, seq_parallel=False, mesh_shape=(1, 2)):
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    rules = make_default_rules(("data",), seq_parallel=seq_parallel)
+    with jax.set_mesh(mesh), activation_sharding_ctx(rules), \\
+            perf_options_ctx(set(opts)):
+        loss, _ = jax.jit(lambda p, b: lm.loss_fn(p, cfg, b))(params, batch)
+    return float(loss)
+"""
+
+
+def test_seq_parallel_exact():
+    out = run_py(COMMON + """
+cfg = tiny("dense")
+params = lm.init_params(jax.random.key(0), cfg)
+batch = make_batch(cfg, t=32)
+base = float(lm.loss_fn(params, cfg, batch)[0])
+sp = loss_with(cfg, params, batch, {"seq_parallel"}, seq_parallel=True)
+print("DELTA", abs(base - sp))
+assert abs(base - sp) < 1e-5, (base, sp)
+""")
+    assert "DELTA" in out
+
+
+def test_pad_heads_exact():
+    out = run_py(COMMON + """
+import numpy as np
+cfg = tiny("dense")          # 4 heads, kv=2
+cfgp = dataclasses.replace(cfg, padded_heads=8)   # pad groups 2->4
+params = lm.init_params(jax.random.key(0), cfg)
+pp = lm.init_params(jax.random.key(1), cfgp)
+# copy live weights into the padded layout (group-wise)
+def pad_q(w):
+    w4 = np.asarray(w).reshape(w.shape[0], w.shape[1], 2, 2, -1)
+    out = np.zeros(w4.shape[:2] + (2, 4, w4.shape[-1]), np.float32)
+    out[..., :2, :] = w4
+    return jnp.asarray(out.reshape(w.shape[0], w.shape[1], 8, -1))
+def pad_o(w):
+    w4 = np.asarray(w).reshape(w.shape[0], 2, 2, w.shape[-2], w.shape[-1])
+    out = np.zeros((w.shape[0], 2, 4) + w4.shape[-2:], np.float32)
+    out[:, :, :2] = w4
+    return jnp.asarray(out.reshape(w.shape[0], 8, w.shape[-2], w.shape[-1]))
+blocks = dict(pp["blocks"]); attn = dict(params["blocks"]["attn"])
+attn["wq"] = pad_q(params["blocks"]["attn"]["wq"])
+attn["wo"] = pad_o(params["blocks"]["attn"]["wo"])
+if "bq" in attn:
+    b3 = np.asarray(params["blocks"]["attn"]["bq"]).reshape(
+        params["blocks"]["attn"]["bq"].shape[0], 2, 2, -1)
+    out = np.zeros((b3.shape[0], 2, 4, b3.shape[-1]), np.float32)
+    out[:, :, :2] = b3
+    attn["bq"] = jnp.asarray(out.reshape(b3.shape[0], 8, -1))
+padded_params = {**params, "blocks": {**params["blocks"], "attn": attn}}
+batch = make_batch(cfg, t=32)
+base = float(lm.loss_fn(params, cfg, batch)[0])
+pad = float(lm.loss_fn(padded_params, cfgp, batch)[0])
+print("DELTA", abs(base - pad))
+assert abs(base - pad) < 1e-5, (base, pad)
+""")
+    assert "DELTA" in out
+
+
+def test_moe_rowcombine_exact_both_branches():
+    out = run_py(COMMON + """
+from repro.models import layers as L
+for name, kw in [("EP", {}), ("Fsharded", {"num_experts": 3,
+                                           "experts_per_token": 2})]:
+    cfg = tiny("moe", **kw)
+    p = L.init_moe(jax.random.key(7), cfg)
+    x = jax.random.normal(jax.random.key(8), (2, 16, cfg.d_model))
+    base, _ = L.moe(p, x, cfg)
+    mesh = jax.make_mesh((1, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    rules = make_default_rules(("data",))
+    with jax.set_mesh(mesh), activation_sharding_ctx(rules), \\
+            perf_options_ctx({"moe_rowcombine"}):
+        opt, _ = jax.jit(lambda p_, x_: L.moe(p_, x_, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt),
+                               atol=2e-5, rtol=2e-5)
+    print(name, "OK")
+""")
+    assert "EP OK" in out and "Fsharded OK" in out
+
+
+def test_moe_rowcombine_gradients_match():
+    """The shard_map expert path must be differentiable and match pjit
+    gradients (it sits inside the TaxoNN engine's per-layer VJP)."""
+    out = run_py(COMMON + """
+from repro.models import layers as L
+cfg = tiny("moe")
+p = L.init_moe(jax.random.key(7), cfg)
+x = jax.random.normal(jax.random.key(8), (2, 16, cfg.d_model))
+
+def loss(p_, x_):
+    out, aux = L.moe(p_, x_, cfg)
+    return jnp.sum(out ** 2) + aux
+
+g_base = jax.grad(loss, argnums=(0, 1))(p, x)
+mesh = jax.make_mesh((1, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+rules = make_default_rules(("data",))
+with jax.set_mesh(mesh), activation_sharding_ctx(rules), \\
+        perf_options_ctx({"moe_rowcombine"}):
+    g_opt = jax.jit(jax.grad(loss, argnums=(0, 1)))(p, x)
+for a, b in zip(jax.tree.leaves(g_base), jax.tree.leaves(g_opt)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=5e-5, rtol=5e-4)
+print("GRADS OK")
+""")
+    assert "GRADS OK" in out
+
+
+def test_ce_bf16_close():
+    out = run_py(COMMON + """
+cfg = tiny("dense")
+params = lm.init_params(jax.random.key(0), cfg)
+batch = make_batch(cfg, t=32)
+base = float(lm.loss_fn(params, cfg, batch)[0])
+with perf_options_ctx({"ce_bf16"}):
+    approx = float(lm.loss_fn(params, cfg, batch)[0])
+print("DELTA", abs(base - approx))
+assert abs(base - approx) < 0.03 * abs(base), (base, approx)
+""", devices=1)
+    assert "DELTA" in out
+
+
+def test_dryrun_machinery_small_mesh():
+    """End-to-end dryrun cell on an in-process 8-device mesh: lower, compile,
+    roofline-extract — the exact machinery behind results/dryrun/."""
+    out = run_py("""
+import os, json, pathlib, tempfile
+import repro.launch.mesh as mesh_mod
+import jax
+from jax.sharding import AxisType
+
+# shrink the production mesh for the 8-device test process
+mesh_mod.make_production_mesh = lambda multi_pod=False: (
+    jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                  axis_types=(AxisType.Auto,) * 3) if multi_pod else
+    jax.make_mesh((4, 2), ("data", "model"),
+                  axis_types=(AxisType.Auto,) * 2))
+import repro.launch.dryrun as dr
+dr.make_production_mesh = mesh_mod.make_production_mesh
+import repro.configs as C
+import dataclasses
+real_get = C.get_config
+def small_get(name):
+    cfg = real_get(name)
+    return dataclasses.replace(cfg, num_layers=4, d_model=64, num_heads=4,
+                               num_kv_heads=4, head_dim=16, d_ff=128,
+                               vocab_size=256, compute_dtype="float32")
+dr.get_config = small_get
+import repro.models.config as MC
+cell = MC.ShapeCell("train_4k", 64, 8, "train")
+MC.SHAPES_BY_NAME["train_4k"] = cell
+dr.SHAPES_BY_NAME = MC.SHAPES_BY_NAME
+
+with tempfile.TemporaryDirectory() as d:
+    for multi in (False, True):
+        rec = dr.run_cell("qwen1.5-0.5b", "train_4k", multi, pathlib.Path(d),
+                          verbose=False)
+        assert rec["status"] == "ok", rec.get("error")
+        t = rec["cost"]["terms"]
+        assert t["compute_s"] > 0 and t["memory_s"] > 0
+        assert rec["useful_flops_ratio"] > 0
+        print("MESH", rec["mesh"], "dominant", t["dominant"])
+print("DRYRUN OK")
+""", devices=8, timeout=900)
+    assert "DRYRUN OK" in out

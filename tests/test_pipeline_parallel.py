@@ -1,0 +1,67 @@
+"""GPipe pipeline parallelism: schedule correctness + differentiability."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 4, timeout=600):
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT/'src'}:{ROOT/'tests'}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_matches_sequential_and_differentiates():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.dist.pipeline import pipeline_apply, bubble_fraction
+
+S, LPS, M, MB, D = 4, 2, 8, 2, 16   # 4 stages x 2 layers, 8 microbatches
+mesh = jax.make_mesh((S,), ("pipe",), axis_types=(AxisType.Auto,))
+
+key = jax.random.key(0)
+w = jax.random.normal(key, (S, LPS, D, D)) * D ** -0.5
+x = jax.random.normal(jax.random.key(1), (M, MB, D))
+
+def body(stage_w, h):     # one stage = LPS tanh layers
+    for i in range(LPS):
+        h = jnp.tanh(h @ stage_w[i])
+    return h
+
+# sequential reference
+ref = x
+for s in range(S):
+    ref = jax.vmap(lambda mb: body(w[s], mb))(ref)
+
+got = pipeline_apply(w, x, body, mesh)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                           atol=1e-5, rtol=1e-5)
+print("FWD OK")
+
+# differentiability: grads through the pipeline == sequential grads
+def loss_pipe(w_):
+    return jnp.sum(pipeline_apply(w_, x, body, mesh) ** 2)
+
+def loss_seq(w_):
+    h = x
+    for s in range(S):
+        h = jax.vmap(lambda mb: body(w_[s], mb))(h)
+    return jnp.sum(h ** 2)
+
+g_pipe = jax.jit(jax.grad(loss_pipe))(w)
+g_seq = jax.grad(loss_seq)(w)
+np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                           atol=1e-4, rtol=1e-4)
+print("GRAD OK")
+assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+""")
+    assert "FWD OK" in out and "GRAD OK" in out

@@ -1,0 +1,158 @@
+"""Property and unit tests for the fixed-point (I,F) quantization library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QFormat,
+    quantize,
+    quantize_ste,
+    quantize_stochastic,
+    fxp_max,
+    fxp_resolution,
+    make_bit_schedule,
+    paper_schedule,
+    compress_int8,
+    decompress_int8,
+)
+from repro.quant.fixed_point import maybe_quantize
+
+
+bit_strategy = st.tuples(st.integers(1, 6), st.integers(2, 14))
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=bit_strategy, data=st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=32))
+def test_quantize_idempotent(bits, data):
+    """q(q(x)) == q(x): quantization is a projection onto the grid."""
+    i, f = bits
+    x = jnp.asarray(np.array(data, np.float32))
+    q1 = quantize(x, i, f)
+    q2 = quantize(q1, i, f)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=0, atol=0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=bit_strategy, data=st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=32))
+def test_quantize_error_bound(bits, data):
+    """In-range values are within half a resolution step of their quant."""
+    i, f = bits
+    x = np.array(data, np.float32)
+    bound = float(fxp_max(i, f))
+    step = float(fxp_resolution(f))
+    q = np.asarray(quantize(jnp.asarray(x), i, f))
+    in_range = np.abs(x) <= bound
+    assert np.all(np.abs(q[in_range] - x[in_range]) <= step / 2 + 1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=bit_strategy, data=st.lists(st.floats(-1000, 1000, width=32), min_size=1, max_size=32))
+def test_quantize_saturates(bits, data):
+    """Out-of-range values clip to the format bounds (hardware saturation)."""
+    i, f = bits
+    x = jnp.asarray(np.array(data, np.float32))
+    bound = float(fxp_max(i, f))
+    step = float(fxp_resolution(f))
+    q = np.asarray(quantize(x, i, f))
+    assert np.all(q <= bound + 1e-7)
+    assert np.all(q >= -bound - step - 1e-7)  # two's complement: min = -2^(I+F) * step
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=bit_strategy)
+def test_grid_values_exact(bits):
+    """Every grid point k*2^-F round-trips exactly."""
+    i, f = bits
+    ks = np.arange(-(2 ** min(i + f, 12)), 2 ** min(i + f, 12), max(1, 2 ** max(i + f - 6, 0)))
+    x = (ks * 2.0 ** -f).astype(np.float32)
+    q = np.asarray(quantize(jnp.asarray(x), i, f))
+    np.testing.assert_array_equal(q, x)
+
+
+def test_ste_gradient_identity_in_range():
+    x = jnp.asarray([0.1, -0.2, 0.5, -0.7], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(quantize_ste(v, 2, 8)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(4), atol=0)
+
+
+def test_ste_gradient_zero_when_saturated():
+    x = jnp.asarray([100.0, -100.0, 0.5], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(quantize_ste(v, 2, 8)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.array([0.0, 0.0, 1.0]), atol=0)
+
+
+def test_stochastic_rounding_unbiased():
+    """Mean of stochastic rounding approaches the true value."""
+    key = jax.random.key(0)
+    x = jnp.full((20000,), 0.3, jnp.float32)  # 0.3 is off-grid for F=2 (step .25)
+    q = quantize_stochastic(x, 2, 2, key)
+    # E[q] = 0.3 exactly; grid points are .25 and .5
+    assert abs(float(jnp.mean(q)) - 0.3) < 0.01
+    vals = np.unique(np.asarray(q))
+    assert set(vals).issubset({0.25, 0.5})
+
+
+def test_stochastic_on_grid_exact():
+    key = jax.random.key(1)
+    x = jnp.asarray([0.25, -0.5, 1.0], jnp.float32)
+    q = quantize_stochastic(x, 3, 2, key)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+def test_qformat_matches_paper_notation():
+    q = QFormat(2, 12)
+    assert q.bitwidth == 15
+    assert repr(q) == "(2,12)"
+    assert q.resolution == 2.0 ** -12
+
+
+def test_bit_schedule_shapes_and_ramp():
+    s = make_bit_schedule(8, weight=(2, 10), ramp=True)
+    assert s.num_layers == 8
+    assert int(s.w_f[0]) == 10
+    assert int(s.w_f[-1]) == 12  # +2 frac bits in the tail
+    assert int(s.w_i[-1]) == 3   # +1 int bit on the last layer
+    lyr = s.layer(0)
+    assert lyr.w_i.shape == ()
+
+
+def test_paper_schedule_table1():
+    s = paper_schedule("mnist", 5)
+    np.testing.assert_array_equal(np.asarray(s.w_i), [2, 2, 2, 1, 3])
+    np.testing.assert_array_equal(np.asarray(s.w_f), [12, 12, 12, 12, 10])
+
+
+def test_maybe_quantize_toggle():
+    x = jnp.asarray([0.333], jnp.float32)
+    on = maybe_quantize(x, 2, 4, jnp.float32(1.0))
+    off = maybe_quantize(x, 2, 4, jnp.float32(0.0))
+    assert float(on[0]) != pytest.approx(0.333, abs=1e-6)
+    assert float(off[0]) == pytest.approx(0.333, abs=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_codec_roundtrip_error(n, seed):
+    """Blockwise int8 codec: relative error bounded by 1/127 per block max."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32) * rng.uniform(0.01, 10)
+    payload, scales = compress_int8(jnp.asarray(x))
+    assert payload.dtype == jnp.int8
+    y = np.asarray(decompress_int8(payload, scales, x.shape))
+    blk = 256
+    xp = np.pad(x, (0, (-n) % blk)).reshape(-1, blk)
+    tol = np.abs(xp).max(axis=1, keepdims=True) / 127.0 * 0.5 + 1e-8
+    err = np.abs(np.pad(x - y.ravel()[:n], (0, (-n) % blk)).reshape(-1, blk))
+    assert np.all(err <= tol + 1e-6)
+
+
+def test_codec_zero_input():
+    x = jnp.zeros((100,), jnp.float32)
+    p, s = compress_int8(x)
+    y = decompress_int8(p, s, (100,))
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(100))

@@ -1,0 +1,57 @@
+"""End-to-end launcher tests: train, checkpoint, kill, resume (subprocess)."""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_train(*extra, timeout=600):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen1.5-0.5b", "--reduced", "--seq-len", "32",
+           "--global-batch", "8", "--log-every", "5", *extra]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def parse_losses(stdout):
+    # per-step lines only ("step N loss X"), not the final summary line
+    return [float(m.group(1))
+            for m in re.finditer(r"step\s+\d+ loss (\d+\.\d+)", stdout)]
+
+
+@pytest.mark.slow
+def test_train_loss_decreases(tmp_path):
+    out = run_train("--steps", "60", "--lr", "3e-2")
+    losses = parse_losses(out)
+    assert len(losses) >= 3
+    assert losses[-1] < losses[0] * 0.9, out[-2000:]
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_continues(tmp_path):
+    ck = tmp_path / "ck"
+    out1 = run_train("--steps", "20", "--lr", "3e-2", "--ckpt-dir", str(ck),
+                     "--ckpt-every", "10")
+    assert (ck / "LATEST").exists()
+    out2 = run_train("--steps", "30", "--lr", "3e-2", "--ckpt-dir", str(ck),
+                     "--resume")
+    assert "resumed from step 20" in out2
+    # resumed run continues from the checkpointed loss level, not from init
+    l1 = parse_losses(out1)
+    l2 = parse_losses(out2)
+    assert l2[0] < l1[0] * 0.98
+
+
+@pytest.mark.slow
+def test_quantized_training_converges():
+    out = run_train("--steps", "60", "--lr", "3e-2", "--quantize")
+    losses = parse_losses(out)
+    assert losses[-1] < losses[0] * 0.92, out[-2000:]

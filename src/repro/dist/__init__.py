@@ -1,0 +1,12 @@
+"""repro.dist — sharding, collectives, pipelining, and HLO accounting.
+
+The distributed-execution layer the models / engine / launchers program
+against:
+
+  api          activation-sharding rules, perf options, ``constrain``
+  sharding     parameter / optimizer / batch / decode-state PartitionSpecs
+  collectives  dense + int8-compressed tree all-reduce (gradient psum)
+  pipeline     GPipe-style microbatch pipeline (exact, differentiable)
+  hlo_analysis compiled-artifact FLOPs/bytes/collective extraction + roofline
+"""
+from repro.util import jaxcompat as _jaxcompat  # noqa: F401  (installs shims)

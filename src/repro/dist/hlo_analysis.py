@@ -1,0 +1,130 @@
+"""Compiled-artifact accounting: FLOPs, HBM bytes, collective traffic,
+and the three-term roofline.
+
+``analyze_compiled`` reads XLA's per-device cost/memory analyses off a
+``jax.stages.Compiled`` and parses the optimized HLO for collective ops
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute),
+summing each op's result bytes as the per-device moved-byte estimate —
+the data-movement accounting NeuroTrainer (Kim et al., 2017) argues
+dominates training energy.
+
+``roofline_terms`` converts (flops, hbm bytes, collective bytes) into
+per-step seconds under a fixed accelerator model and names the dominant
+term.  Extrapolation across scan depth happens in launch/dryrun.py; this
+module only measures one artifact.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# Accelerator model for the roofline (TPU-class chip; order-of-magnitude
+# honest, single source of truth for reports and benchmarks).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per device
+HBM_BANDWIDTH = 819e9        # bytes/s per device
+ICI_BANDWIDTH = 90e9         # bytes/s per device (all links combined)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# one HLO array type, e.g. f32[4,8]{1,0} or pred[] — captures dtype + dims
+_ARRAY_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)"
+                       r"\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(typestr):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Count collectives and sum their result bytes in optimized HLO."""
+    counts: Dict[str, int] = {}
+    moved = 0
+    for typestr, kind in _COLLECTIVE_RE.findall(hlo_text):
+        counts[kind] = counts.get(kind, 0) + 1
+        moved += _shape_bytes(typestr)
+    return {"counts": counts, "moved_bytes_per_device": float(moved)}
+
+
+def _cost_dict(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _memory_dict(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    return out
+
+
+def analyze_compiled(compiled, n_devices: int = 1) -> Dict:
+    """Per-device cost record for one compiled (SPMD) artifact.
+
+    The compiled module is already the per-device program, so XLA's cost
+    analysis is per-device as-is; ``n_devices`` is recorded for context.
+    """
+    cost = _cost_dict(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    return {
+        "n_devices": int(n_devices),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "hbm_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": collective_stats(hlo),
+        "memory_analysis": _memory_dict(compiled),
+    }
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   collective_bytes: float) -> Dict:
+    """Three-term roofline: seconds spent if each resource were the only
+    bottleneck, plus which term dominates."""
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BANDWIDTH,
+        "collective_s": collective_bytes / ICI_BANDWIDTH,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "step_s_lower_bound": max(terms.values()),
+        "dominant": dominant.replace("_s", ""),
+    }

@@ -134,7 +134,7 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: Array):
     x = L.apply_norm(params["final_norm"], x, cfg)
     w = lm.head_weight(params, cfg)
     logits = constrain(
-        (x[:, 0, :] @ w.astype(x.dtype)).astype(jnp.float32), "btv")
+        (x[:, 0, :] @ w.astype(x.dtype)).astype(jnp.float32), "bv")
     return logits, {"caches": new_caches, "pos": pos + 1}
 
 

@@ -1,0 +1,117 @@
+"""Backfill the explicit-mesh JAX API onto older jax releases.
+
+The codebase programs against the sharding-in-types era surface:
+
+    jax.make_mesh(shape, names, axis_types=...)   # axis_types kwarg
+    jax.set_mesh(mesh)                            # context manager
+    jax.sharding.AxisType.{Auto,Explicit,Manual}
+    jax.sharding.get_abstract_mesh()
+    jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)
+
+On jax>=0.6 these exist natively and this module is a no-op.  On the
+pinned 0.4.x toolchain we map each onto its older equivalent:
+
+  * ``set_mesh``   -> the classic ``with mesh:`` resource-env context
+  * ``get_abstract_mesh`` -> the physical mesh of that resource env (it has
+    the same ``.shape`` mapping and is accepted by ``shard_map``)
+  * ``shard_map``  -> ``jax.experimental.shard_map.shard_map`` with
+    ``check_vma`` translated to ``check_rep``
+  * ``make_mesh``  -> drop the ``axis_types`` kwarg (0.4.x is all-Auto:
+    every array is GSPMD-partitionable, which is exactly what Auto means)
+
+Import this module before any mesh-using code runs.  It is imported by
+``repro/__init__``-free namespace consumers via ``sitecustomize`` (any
+process with ``src`` on PYTHONPATH) and by ``tests/conftest.py``.
+Idempotent: safe to import any number of times.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+
+def _physical_mesh():
+    """The mesh installed by ``with mesh:`` (empty mesh when outside)."""
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def install() -> None:
+    # --- AxisType ---------------------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # --- make_mesh(axis_types=...) ---------------------------------------
+    # Probe the signature only: calling make_mesh would initialize the
+    # backend before launchers get a chance to set XLA_FLAGS.
+    import inspect
+    try:
+        native_axis_types = "axis_types" in inspect.signature(
+            jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        native_axis_types = True  # unknown signature; leave untouched
+
+    if not native_axis_types and not getattr(jax.make_mesh, "_repro_compat",
+                                             False):
+        orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # 0.4.x semantics are all-Auto already
+            return orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+    # --- set_mesh ---------------------------------------------------------
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            """Context manager installing ``mesh`` as the ambient mesh.
+
+            A ``Mesh`` is its own context manager in 0.4.x; entering it sets
+            the resource env that ``get_abstract_mesh`` (below) reads.
+            """
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    # --- get_abstract_mesh ------------------------------------------------
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def get_abstract_mesh():
+            return _physical_mesh()
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    # --- shard_map --------------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=True, **kw):
+            check_rep = kw.pop("check_rep", check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=bool(check_rep),
+                              **kw)
+
+        jax.shard_map = shard_map
+
+    # --- pallas: pltpu.CompilerParams rename ------------------------------
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        if not hasattr(pltpu, "CompilerParams") and hasattr(
+                pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except Exception:  # pragma: no cover - pallas not present on this build
+        pass
+
+
+install()

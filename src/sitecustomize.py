@@ -1,0 +1,11 @@
+"""Auto-loaded by the interpreter when ``src`` is on PYTHONPATH.
+
+Installs the jax API compatibility shims (see repro/util/jaxcompat.py)
+before any test or launcher code imports jax mesh machinery.  Subprocess
+tests (`python -c` with PYTHONPATH=src:tests) rely on this; in-process
+pytest runs get the same shims via tests/conftest.py.
+"""
+try:
+    import repro.util.jaxcompat  # noqa: F401
+except Exception:  # pragma: no cover - never block interpreter start-up
+    pass

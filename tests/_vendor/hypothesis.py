@@ -1,0 +1,120 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` property-testing
+library, used ONLY when the real package is not installed (see
+tests/conftest.py — the container for this repo does not ship hypothesis
+and the toolchain is pinned, so vendoring a fallback keeps the property
+tests executing instead of skipping).
+
+Implements the tiny surface the test-suite uses:
+
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(a, b), y=st.floats(a, b, width=32),
+           z=st.lists(elem, min_size=a, max_size=b), w=st.tuples(...))
+
+Each test runs ``max_examples`` times on a per-test deterministic RNG
+(seeded from the test name), with the first examples biased to interval
+boundaries.  Failures report the generated arguments like hypothesis does.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-repro-vendored"
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+
+    def example(self, rng, index: int):
+        if index < len(self._boundaries):
+            return self._boundaries[index]
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundaries=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, width: int = 64,
+               **_kw) -> _Strategy:
+        cast = np.float32 if width == 32 else np.float64
+
+        def draw(rng):
+            return float(cast(rng.uniform(min_value, max_value)))
+
+        bounds = [float(cast(min_value)), float(cast(max_value))]
+        if min_value <= 0.0 <= max_value:
+            bounds.append(0.0)
+        return _Strategy(draw, boundaries=bounds)
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        def draw(rng):
+            return tuple(s._draw(rng) for s in strats)
+
+        bounds = []
+        if all(s._boundaries for s in strats):
+            bounds = [tuple(s._boundaries[0] for s in strats),
+                      tuple(s._boundaries[-1] for s in strats)]
+        return _Strategy(draw, boundaries=bounds)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(n)]
+
+        bounds = []
+        if min_size >= 1:  # boundary lists must respect min_size
+            bounds = [[b] * min_size for b in elements._boundaries]
+        return _Strategy(draw, boundaries=bounds)
+
+
+st = strategies
+
+
+class settings:
+    def __init__(self, max_examples: int = 100, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_max_examples = self.max_examples
+        return fn
+
+
+def given(**named_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", 100)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {name: strat.example(rng, i)
+                         for name, strat in named_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on example {i}: "
+                        f"{drawn!r}") from e
+
+        # pytest must not see the property arguments as fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+__all__ = ["given", "settings", "strategies", "st"]

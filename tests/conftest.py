@@ -1,0 +1,22 @@
+"""Test bootstrap: put ``src`` on sys.path and install the jax compat shims
+before any test module imports mesh machinery.
+
+Subprocess tests (test_perf_options / test_pipeline_parallel / the train
+driver) get the same treatment via ``src/sitecustomize.py`` — they export
+PYTHONPATH=src themselves, which auto-imports it at interpreter start-up.
+"""
+import pathlib
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+import repro.util.jaxcompat  # noqa: E402,F401
+
+# The pinned container has no hypothesis wheel; fall back to the vendored
+# deterministic mini-implementation so the property tests still execute.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "_vendor"))

@@ -1,0 +1,156 @@
+"""Direct unit tests for repro.dist.api and repro.dist.sharding."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.api import (activation_sharding_ctx, constrain,
+                            make_default_rules, model_axis_size_ctx,
+                            perf_opt, perf_options_ctx)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 2, timeout=300):
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT/'src'}:{ROOT/'tests'}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def test_make_default_rules_table():
+    r = make_default_rules(("data",))
+    assert r["b"] == ("data",)
+    assert r["t"] is None          # sequence replicated without seq_parallel
+    assert r["d"] is None          # residual stream TP-replicated
+    assert r["v"] == "model"       # vocab-parallel CE head
+
+
+def test_make_default_rules_seq_parallel():
+    r = make_default_rules(("pod", "data"), seq_parallel=True)
+    assert r["b"] == ("pod", "data")
+    assert r["t"] == "model"       # the one thing seq_parallel changes
+    assert make_default_rules(("pod", "data"))["t"] is None
+
+
+def test_seq_parallel_never_steals_vocab_axis():
+    """Under seq_parallel both 't' and 'v' want "model"; vocab must win —
+    the CE head's masked-target pick is collective-free only with V
+    sharded (see lm.ce_from_weight)."""
+    from types import SimpleNamespace
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.api import _spec_for
+
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 2, "model": 2})
+    rules = make_default_rules(("data",), seq_parallel=True)
+    assert _spec_for("btv", 3, rules, mesh, (4, 8, 128)) == \
+        P("data", None, "model")
+    # without a vocab dim, seq_parallel does shard the sequence
+    assert _spec_for("btd", 3, rules, mesh, (4, 8, 128)) == \
+        P("data", "model", None)
+
+
+# ---------------------------------------------------------------------------
+# constrain outside any mesh context
+# ---------------------------------------------------------------------------
+
+def test_constrain_noop_outside_mesh():
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert constrain(x, "btd") is x                      # no rules, no mesh
+    with activation_sharding_ctx(make_default_rules(("data",))):
+        assert constrain(x, "btd") is x                  # rules but no mesh
+    assert model_axis_size_ctx() == 1
+
+
+def test_perf_options_scoping():
+    assert not perf_opt("ce_bf16")
+    with perf_options_ctx({"ce_bf16", "seq_parallel"}):
+        assert perf_opt("ce_bf16") and perf_opt("seq_parallel")
+        assert not perf_opt("moe_rowcombine")
+    assert not perf_opt("ce_bf16")
+    try:
+        with perf_options_ctx({"not_a_real_option"}):
+            pass
+        raise AssertionError("unknown option accepted")
+    except ValueError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# pspecs on a 1x2 host mesh (subprocess: needs 2 devices)
+# ---------------------------------------------------------------------------
+
+def test_param_and_batch_pspecs_1x2_mesh():
+    out = run_py("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType, PartitionSpec as P
+from repro.dist.sharding import batch_pspecs, param_pspecs, to_named
+from repro.models import lm
+from test_models import tiny, make_batch
+
+cfg = tiny("dense")
+params = lm.init_params(jax.random.key(0), cfg)
+mesh = jax.make_mesh((1, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+
+specs = param_pspecs(cfg, params, mesh)
+# same structure as the params tree
+assert jax.tree.structure(specs, is_leaf=lambda s: isinstance(s, P)) \\
+    .num_leaves == len(jax.tree.leaves(params))
+# vocab-sharded embedding, head-sharded attention, col/row-parallel MLP
+assert specs["embed"] == P("model", None)
+assert specs["blocks"]["attn"]["wq"] == P(None, None, "model", None)
+assert specs["blocks"]["attn"]["wo"] == P(None, "model", None, None)
+assert specs["blocks"]["mlp"]["w_up"] == P(None, None, "model")
+assert specs["blocks"]["mlp"]["w_down"] == P(None, "model", None)
+assert specs["final_norm"]["scale"] == P()
+# every spec is realizable: device_put the whole tree
+placed = jax.device_put(params, to_named(specs, mesh))
+for a, b in zip(jax.tree.leaves(placed), jax.tree.leaves(params)):
+    assert a.shape == b.shape
+
+batch = make_batch(cfg, b=2, t=16)
+bspecs = batch_pspecs(batch, mesh)
+assert bspecs["tokens"] == P("data", None)
+assert bspecs["labels"] == P("data", None)
+print("PSPECS OK")
+""")
+    assert "PSPECS OK" in out
+
+
+def test_constrain_applies_inside_mesh():
+    out = run_py("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.dist.api import (activation_sharding_ctx, constrain,
+                            make_default_rules, model_axis_size_ctx)
+
+mesh = jax.make_mesh((1, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+rules = make_default_rules(("data",))
+x = jnp.arange(2.0 * 8 * 128).reshape(2, 8, 128)
+with jax.set_mesh(mesh), activation_sharding_ctx(rules):
+    assert model_axis_size_ctx() == 2
+    y = jax.jit(lambda v: constrain(v, "btv") * 1.0)(x)
+# vocab dim sharded over the 2-way model axis
+import numpy as np
+np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+shards = {s.device for s in y.addressable_shards}
+assert len(shards) == 2
+print("CONSTRAIN OK")
+""")
+    assert "CONSTRAIN OK" in out

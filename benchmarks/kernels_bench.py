@@ -1,6 +1,7 @@
-"""Kernel microbenchmarks: us_per_call of the three TaxoNN Pallas kernels
+"""Kernel microbenchmarks: us_per_call of the four TaxoNN Pallas kernels
 (interpret mode on CPU — structural check; Mosaic-compiled on TPU) against
-their XLA-fused jnp references."""
+their XLA-fused jnp references, on both datapaths (f32 emulation and the
+int8 MXU path)."""
 from __future__ import annotations
 
 import time
@@ -9,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ops import bp_gstep_op, fxp_matmul_op, sgd_dw_update_op
+from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,
+                               sgd_dw_update_op)
 
 
 def _timeit(fn, *args, reps=5):
@@ -30,24 +32,56 @@ def run(quick: bool = False):
     z = jax.random.normal(jax.random.key(3), (m, m))
 
     jref_mm = jax.jit(lambda a, b: ref.fxp_matmul_ref(a, b))
+    jref_mm8 = jax.jit(lambda a, b: ref.fxp_matmul_int8_ref(a, b))
     jref_g = jax.jit(lambda a, b, c: ref.bp_gstep_ref(a, b, c))
     jref_u = jax.jit(lambda a, b, c: ref.sgd_dw_update_ref(a, b, c, 0.01))
+    jref_f = jax.jit(lambda a, b, c, d: ref.bp_fused_unit_ref(a, b, c, d,
+                                                              0.01))
+    jref_f8 = jax.jit(lambda a, b, c, d: ref.bp_fused_unit_int8_ref(a, b, c,
+                                                                    d, 0.01))
 
+    def mm_i8(a, b):
+        return fxp_matmul_op(a, b, datapath="int8")
+
+    def fused(a, b, c, d):
+        return bp_fused_unit_op(a, b, c, d, 0.01)
+
+    def fused_i8(a, b, c, d):
+        return bp_fused_unit_op(a, b, c, d, 0.01, datapath="int8")
+
+    shape = f"{m}x{m}x{m}"
     return [{
         "name": "kernels/fxp_matmul",
         "us_per_call": _timeit(fxp_matmul_op, x, w),
         "ref_us": _timeit(jref_mm, x, w),
-        "shape": f"{m}x{m}x{m}",
+        "shape": shape,
         "note": "interpret-mode on CPU; Mosaic on TPU",
+    }, {
+        "name": "kernels/fxp_matmul_int8",
+        "us_per_call": _timeit(mm_i8, x, w),
+        "ref_us": _timeit(jref_mm8, x, w),
+        "shape": shape,
+        "note": "int8 MXU datapath (int32 wide accumulators)",
     }, {
         "name": "kernels/bp_gstep",
         "us_per_call": _timeit(bp_gstep_op, g, w, z),
         "ref_us": _timeit(jref_g, g, w, z),
-        "shape": f"{m}x{m}x{m}",
+        "shape": shape,
     }, {
         "name": "kernels/sgd_dw_update",
         "us_per_call": _timeit(lambda a, b, c: sgd_dw_update_op(a, b, c, 0.01),
                                x, g, w),
         "ref_us": _timeit(jref_u, x, g, w),
-        "shape": f"{m}x{m}x{m}",
+        "shape": shape,
+    }, {
+        "name": "kernels/bp_fused_unit",
+        "us_per_call": _timeit(fused, g, w, x, z),
+        "ref_us": _timeit(jref_f, g, w, x, z),
+        "shape": shape,
+        "note": "full TDM frame (Eq.8+Eq.9+Eq.1) in one pass",
+    }, {
+        "name": "kernels/bp_fused_unit_int8",
+        "us_per_call": _timeit(fused_i8, g, w, x, z),
+        "ref_us": _timeit(jref_f8, g, w, x, z),
+        "shape": shape,
     }]

@@ -1,18 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                            [--json [PATH]]
 
-Prints ``name,us_per_call,derived`` CSV (derived = key=value pairs).
+Prints ``name,us_per_call,derived`` CSV (derived = key=value pairs) and,
+with ``--json``, persists the rows as a JSON list (default path
+``BENCH_kernels.json``) so the perf trajectory is tracked across PRs (CI
+uploads it as an artifact).
+
   convergence — Fig. 5 / Table I   (per-layer (I,F) vs fp32 accuracy)
   overhead    — Tables II/III     (train-support cost over inference)
   savings     — Table IV          (low-bitwidth savings vs full precision)
   pipeline    — Fig. 3            (fused per-layer BP vs monolithic)
-  kernels     — PE datapath       (Pallas kernel microbenches)
+  kernels     — PE datapath       (Pallas kernel microbenches, emulate+int8)
   roofline    — (beyond paper)    (dry-run roofline summary)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -21,6 +27,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write results as a JSON list (default "
+                         "BENCH_kernels.json)")
     args = ap.parse_args()
 
     from benchmarks import (convergence, kernels_bench, overhead, pipeline,
@@ -37,6 +47,7 @@ def main() -> None:
         suites = {args.only: suites[args.only]}
 
     print("name,us_per_call,derived")
+    results = []
     failures = 0
     for name, fn in suites.items():
         try:
@@ -51,6 +62,11 @@ def main() -> None:
                 f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
                 for k, v in r.items() if k not in ("name", "us_per_call"))
             print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+            results.append({"suite": name, **r})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(results)} rows to {args.json}", flush=True)
     if failures:
         raise SystemExit(1)
 

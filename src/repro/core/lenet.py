@@ -1,0 +1,176 @@
+"""The paper's LeNet-class evaluation network on the kernel datapath.
+
+This is Fig. 3 made literal: a 5-layer MLP classifier whose train step runs
+every SGD-unit frame through the fused Pallas kernels —
+
+    forward            fxp_matmul      (per-layer (I,F) MACs)
+    head G seed        bp_gstep        (Eq. 8 against W_out)
+    hidden frames      bp_fused_unit   (Eq. 8 + Eq. 9 + Eq. 1, one pass)
+    input/head update  sgd_dw_update   (Eq. 9 + Eq. 1 fused)
+
+Layers are Python-unrolled (the paper's network is 5 layers) so each layer
+carries its own *static* (I,F) design point — exactly how the chip loads a
+Table-I schedule into its per-layer format registers.  Three backends share
+the math: ``off`` (jnp oracles — the correctness contract), ``emulate``
+(Pallas kernels, f32 MACs), and ``int8`` (int8 MXU operands with int32
+wide accumulators).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lenet5 import LeNetConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.ops import resolve_backend
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNetBits:
+    """Per-layer static (I,F) design points (None entries = full precision).
+
+    ``w``/``a``/``g`` each hold ``num_layers`` tuples: weights, activations
+    (layer inputs), gradients (the G chain) — the three tensor classes the
+    paper quantizes (Table I).
+    """
+
+    w: tuple
+    a: tuple
+    g: tuple
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.w)
+
+
+def lenet_bits(num_layers: int, weight=(2, 12), act=(4, 10),
+               grad=(2, 12)) -> LeNetBits:
+    return LeNetBits(w=(weight,) * num_layers, a=(act,) * num_layers,
+                     g=(grad,) * num_layers)
+
+
+def lenet_bits_off(num_layers: int) -> LeNetBits:
+    return LeNetBits(w=(None,) * num_layers, a=(None,) * num_layers,
+                     g=(None,) * num_layers)
+
+
+def lenet_bits_table(points: Sequence[tuple]) -> LeNetBits:
+    """One (I,F) per layer applied to all three classes (Table-I style)."""
+    pts = tuple(points)
+    return LeNetBits(w=pts, a=pts, g=pts)
+
+
+def init_lenet_params(key, cfg: LeNetConfig) -> dict:
+    """Same layout as benchmarks/convergence: w_in + stacked hidden + w_out."""
+    n_hidden = cfg.num_layers - 2
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": jax.random.normal(ks[0], (cfg.input_dim, cfg.hidden),
+                                  jnp.float32) * cfg.input_dim ** -0.5,
+        "hidden": jax.random.normal(
+            ks[1], (n_hidden, cfg.hidden, cfg.hidden),
+            jnp.float32) * cfg.hidden ** -0.5,
+        "w_out": jax.random.normal(ks[2], (cfg.hidden, cfg.num_classes),
+                                   jnp.float32) * cfg.hidden ** -0.5,
+    }
+
+
+def make_lenet_train_step(cfg: LeNetConfig, bits: Optional[LeNetBits] = None,
+                          kernel_backend: str = "off"):
+    """Build ``step(params, batch, lr) -> (params, metrics)``.
+
+    ``batch`` = (x [B, input_dim] f32, y [B] int32).  SGD only (the paper's
+    optimizer); the update is fused into the backward kernels.
+    """
+    backend = resolve_backend(kernel_backend)
+    bits = bits or lenet_bits_off(cfg.num_layers)
+    assert bits.num_layers == cfg.num_layers, (bits.num_layers, cfg.num_layers)
+    n_hidden = cfg.num_layers - 2
+    datapath = "int8" if backend == "int8" else "emulate"
+
+    def _mm(x, w, li):
+        if backend == "off":
+            return kref.fxp_matmul_ref(x, w, xa_bits=bits.a[li],
+                                       w_bits=bits.w[li], out_bits=None,
+                                       act="identity")
+        return kops.fxp_matmul_op(x, w, xa_bits=bits.a[li], w_bits=bits.w[li],
+                                  out_bits=None, act="identity",
+                                  datapath=datapath)
+
+    def _gstep(g, w, z, li):
+        if backend == "off":
+            return kref.bp_gstep_ref(g, w, z, g_bits=bits.g[li], act="relu")
+        return kops.bp_gstep_op(g, w, z, g_bits=bits.g[li], act="relu",
+                                datapath=datapath, g_in_bits=bits.g[li + 1]
+                                if li + 1 < cfg.num_layers else None,
+                                w_bits=bits.w[li + 1]
+                                if li + 1 < cfg.num_layers else None)
+
+    def _dw_update(x, g, w, lr, li):
+        if backend == "off":
+            return kref.sgd_dw_update_ref(x, g, w, lr, w_bits=None)
+        return kops.sgd_dw_update_op(x, g, w, lr, w_bits=None,
+                                     datapath=datapath, xa_bits=bits.a[li],
+                                     g_in_bits=bits.g[li])
+
+    def _frame(g, w, x, z, lr, li):
+        """The layer-li TDM frame: consumes G_{z_li}, produces
+        (G_{z_{li-1}}, W_li_new)."""
+        if backend == "off":
+            return kref.bp_fused_unit_ref(
+                g, w, x, z, lr, g_bits=bits.g[li - 1], w_bits=bits.w[li],
+                w_out_bits=None, act="relu")
+        return kops.bp_fused_unit_op(
+            g, w, x, z, lr, g_bits=bits.g[li - 1], w_bits=bits.w[li],
+            w_out_bits=None, act="relu", datapath=datapath,
+            g_in_bits=bits.g[li], xa_bits=bits.a[li])
+
+    def step(params, batch, lr):
+        x, y = batch
+        bsz = x.shape[0]
+
+        # ---- forward: cache every pre-activation (the Z registers) -------
+        zs, hs = [], []
+        z = _mm(x, params["w_in"], 0)
+        h = jnp.maximum(z, 0.0)
+        zs.append(z)
+        hs.append(h)
+        for i in range(n_hidden):
+            z = _mm(h, params["hidden"][i], i + 1)
+            h = jnp.maximum(z, 0.0)
+            zs.append(z)
+            hs.append(h)
+        logits = _mm(h, params["w_out"], cfg.num_layers - 1)
+
+        ls = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(ls, y[:, None], 1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        dlogits = (jax.nn.softmax(logits)
+                   - jax.nn.one_hot(y, cfg.num_classes)) / bsz
+
+        # ---- backward: the G chain, one fused frame per hidden layer -----
+        # head: Eq. 8 seed against W_out + its fused update
+        g = _gstep(dlogits, params["w_out"], zs[-1], cfg.num_layers - 2)
+        new_w_out = _dw_update(hs[-1], dlogits, params["w_out"], lr,
+                               cfg.num_layers - 1)
+        new_hidden = [None] * n_hidden
+        for i in reversed(range(n_hidden)):
+            g, w_new = _frame(g, params["hidden"][i], hs[i], zs[i], lr, i + 1)
+            new_hidden[i] = w_new
+        new_w_in = _dw_update(x, g, params["w_in"], lr, 0)
+
+        new_params = {
+            "w_in": new_w_in,
+            "hidden": jnp.stack(new_hidden) if new_hidden
+            else params["hidden"],
+            "w_out": new_w_out,
+        }
+        return new_params, {"loss": loss, "acc": acc}
+
+    return step

@@ -28,6 +28,7 @@ from repro.core.taxonn import (
     forward_stack,
     quantize_weight_tree,
 )
+from repro.kernels.ops import kernel_backend_ctx, resolve_backend
 from repro.quant.fixed_point import quantize_ste
 from repro.util.scan import xscan
 from repro.models import blocks as B
@@ -168,14 +169,22 @@ def _bits_edge(bits, idx):
 
 def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                     optim_cfg: Optional[OptimizerConfig] = None,
-                    engine: str = "taxonn"):
+                    engine: str = "taxonn",
+                    kernel_backend: Optional[str] = None):
+    """``kernel_backend`` overrides ``policy.kernel_backend`` ("off" |
+    "emulate" | "int8" | "auto"; auto = off on CPU, int8 on TPU) and selects
+    the datapath for the dense-unit matmuls in the step's hot loops."""
     policy = policy or QuantPolicy.off()
     optim_cfg = optim_cfg or OptimizerConfig()
+    backend = resolve_backend(
+        kernel_backend if kernel_backend is not None
+        else getattr(policy, "kernel_backend", "auto"))
 
     if engine == "autodiff":
         def auto_step(params, opt_state, batch, hyper: Hyper, bits=None):
-            (loss, metrics), grads = jax.value_and_grad(
-                lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
+            with kernel_backend_ctx(backend):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
             gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                       for g in jax.tree.leaves(grads))
             new_params, new_opt = {}, {}
@@ -192,8 +201,8 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
     fam = cfg.family
     scale = policy.grad_scale
 
-    def step(params, opt_state, batch, hyper: Hyper, bits: dict,
-             rng: Optional[Array] = None):
+    def _step_impl(params, opt_state, batch, hyper: Hyper, bits: dict,
+                   rng: Optional[Array] = None):
         main_bits = bits["blocks"]
         bnd_keys = boundary_keys(params)
         bnd = {k: params[k] for k in bnd_keys}
@@ -313,6 +322,11 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
 
         metrics["grad_norm"] = jnp.sqrt(gsq)
         return new_params, new_opt, metrics
+
+    def step(params, opt_state, batch, hyper: Hyper, bits: dict,
+             rng: Optional[Array] = None):
+        with kernel_backend_ctx(backend):  # active at trace time
+            return _step_impl(params, opt_state, batch, hyper, bits, rng)
 
     return step
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.collectives import compressed_psum
 from repro.optim import OptimizerConfig, Hyper, apply_update
 from repro.util.scan import xscan
 from repro.quant.fixed_point import (
@@ -55,6 +56,16 @@ class QuantPolicy:
     quantize_updates: bool = False   # strict paper mode: q(alpha*dW) in-format
     stochastic: bool = False         # stochastic rounding for grads/updates
     grad_scale: float = 1.0          # loss scaling for the low-bit G chain
+    # KernelBackend knob: "off" (pure jnp), "emulate" (Pallas f32 kernels),
+    # "int8" (int8 MXU datapath), "auto" (off on CPU, int8 on TPU).
+    kernel_backend: str = "auto"
+    # Route each layer's dW through the int8 block-scaled wire format inside
+    # the backward scan (dist.collectives.compressed_psum).  With
+    # ``dw_psum_axes`` naming mesh axes (engine running in a shard_map) the
+    # all-reduce moves compressed bytes; with no axes it is the codec
+    # round-trip only (single-replica numerics of the same wire format).
+    compress_dw: bool = False
+    dw_psum_axes: tuple = ()
 
     @staticmethod
     def off() -> "QuantPolicy":
@@ -199,6 +210,12 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         # un-scale, optionally quantize the update itself (strict paper mode)
         def prep(g):
             g = g.astype(jnp.float32) * inv_scale
+            if policy.compress_dw:
+                # per-layer dW through the int8 block-scaled wire format
+                # (and its all-reduce when mesh axes are named) — issued
+                # inside the scan body so it overlaps the next layer's
+                # G-step, the paper's timing overlap at pod scale
+                g = compressed_psum(g, policy.dw_psum_axes)
             if policy.quantize_updates:
                 upd = hyper.lr * g
                 if policy.stochastic and key is not None:

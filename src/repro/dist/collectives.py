@@ -47,6 +47,28 @@ def dense_psum_tree(grads, mesh, axes: Iterable[str]):
                          check_vma=False)(grads)
 
 
+def compressed_psum(x, axes: Iterable[str] = (), num_replicas: int = None):
+    """One-tensor int8 block-scaled all-reduce (the dW wire format).
+
+    Must run inside a context where ``axes`` are named mesh axes (a
+    shard_map body) when ``axes`` is non-empty; with empty axes (or a
+    1-replica reduction) it degrades to the pure codec round-trip — the
+    wire-format numerics with no collective.  This is the form the TaxoNN
+    engine's backward scan calls per layer (QuantPolicy.compress_dw): the
+    int8 dW tiles the fused kernels produce are exactly this payload.
+    """
+    axes = tuple(axes)
+    payload, scales = compress_int8(x)
+    if not axes or num_replicas == 1:
+        return decompress_int8(payload, scales, x.shape, x.dtype)
+    pg = lax.all_gather(payload, axes)   # [n, N] int8 on the wire
+    sg = lax.all_gather(scales, axes)    # [n, N/BLOCK] f32
+    dec = jax.vmap(
+        lambda p, s: decompress_int8(p, s, x.shape, jnp.float32)
+    )(pg, sg)
+    return jnp.sum(dec, axis=0).astype(x.dtype)
+
+
 def compressed_psum_tree(grads, mesh, axes: Iterable[str]):
     """int8 block-scaled all-reduce: compress locally, move compressed
     bytes, decompress + sum on every replica."""
@@ -54,18 +76,8 @@ def compressed_psum_tree(grads, mesh, axes: Iterable[str]):
     n = _reduce_size(mesh, axes)
 
     def f(tree):
-        def one(x):
-            payload, scales = compress_int8(x)
-            if n == 1:
-                return decompress_int8(payload, scales, x.shape, x.dtype)
-            pg = lax.all_gather(payload, axes)   # [n, N] int8 on the wire
-            sg = lax.all_gather(scales, axes)    # [n, N/BLOCK] f32
-            dec = jax.vmap(
-                lambda p, s: decompress_int8(p, s, x.shape, jnp.float32)
-            )(pg, sg)
-            return jnp.sum(dec, axis=0).astype(x.dtype)
-
-        return jax.tree.map(one, tree)
+        return jax.tree.map(
+            lambda x: compressed_psum(x, axes, num_replicas=n), tree)
 
     return jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
                          check_vma=False)(grads)

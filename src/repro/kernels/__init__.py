@@ -1,3 +1,35 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""TaxoNN Pallas kernels: the paper's SGD-unit datapath on the MXU.
+
+Four fused kernels (each with a f32-emulation and an int8-MXU datapath):
+  fxp_matmul    — forward PE op  y = f(q_a(X) @ q_w(W))
+  bp_gstep      — Eq. 8 G-chain step (backward matmul + derivation unit)
+  sgd_dw_update — Eq. 9 outer product fused with the Eq. 1 weight update
+  bp_fused_unit — the full TDM frame (Eq. 8 + Eq. 9 + Eq. 1 in one pass)
+
+``ops`` holds the jit'd wrappers, the block autotuner, and the
+``KernelBackend`` knob that wires these into the train/serve hot paths.
+``ref`` holds the pure-jnp oracles (the correctness contract).
+"""
+from repro.kernels.bp_fused_unit import bp_fused_unit
+from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.fxp_matmul import fxp_matmul
+from repro.kernels.sgd_dw_update import sgd_dw_update
+from repro.kernels.ops import (
+    KERNEL_BACKENDS,
+    bp_fused_unit_op,
+    bp_gstep_op,
+    current_backend,
+    fxp_matmul_op,
+    kernel_backend_ctx,
+    resolve_backend,
+    sgd_dw_update_op,
+    tune_blocks,
+    tune_fused,
+)
+
+__all__ = [
+    "bp_fused_unit", "bp_gstep", "fxp_matmul", "sgd_dw_update",
+    "bp_fused_unit_op", "bp_gstep_op", "fxp_matmul_op", "sgd_dw_update_op",
+    "KERNEL_BACKENDS", "kernel_backend_ctx", "current_backend",
+    "resolve_backend", "tune_blocks", "tune_fused",
+]

@@ -8,21 +8,31 @@ the outgoing G — the intermediate (G @ W^T) never round-trips HBM.  This is
 the TDM insight transplanted: the scarce resource on TPU is HBM bandwidth,
 so the four TaxoNN multiplier time-slots become one fused VMEM pipeline.
 
+Datapaths (see fxp_matmul.py): ``emulate`` computes the MAC at f32;
+``int8`` takes G and W as int8 payloads, runs the MAC as int8 x int8 ->
+int32 on the MXU with an exact int32 VMEM accumulator, and applies the
+combined scale s_g * s_w once before the f' multiply.
+
 Shapes: G [T, Dout], W [Din, Dout] (forward orientation), Z [T, Din]
-(pre-activation of layer i).  Output G_i [T, Din].
+(pre-activation of layer i; ``z=None`` with act="identity" skips the
+derivative input entirely).  Output G_i [T, Din].
 Grid (T/bm, Din/bn, Dout/bk); W^T is expressed through the BlockSpec index
 map (no materialised transpose).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import act_deriv, kq
+from repro.kernels.common import act_deriv, int8_dot, maybe_kq
+
+# dot dims for G block [bm, bk] @ (W block [bn, bk])^T -> [bm, bn]
+_GW_DIMS = (((1,), (1,)), ((), ()))
 
 
 def _kernel(g_ref, w_ref, z_ref, o_ref, *, n_k: int, g_bits, act: str):
@@ -32,45 +42,110 @@ def _kernel(g_ref, w_ref, z_ref, o_ref, *, n_k: int, g_bits, act: str):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # G block [bm, bk] @ (W block [bn, bk])^T -> [bm, bn]
-    acc = jax.lax.dot_general(
-        g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    acc = jax.lax.dot_general(g_ref[...], w_ref[...], _GW_DIMS,
+                              preferred_element_type=jnp.float32)
     o_ref[...] += acc
 
     @pl.when(k == n_k - 1)
     def _finish():
-        fprime = act_deriv(z_ref[...].astype(jnp.float32), act)
-        y = o_ref[...] * fprime
-        if g_bits is not None:
-            y = kq(y, *g_bits)
-        o_ref[...] = y
+        y = o_ref[...]
+        if z_ref is not None:
+            y = y * act_deriv(z_ref[...].astype(jnp.float32), act)
+        o_ref[...] = maybe_kq(y, g_bits)
 
 
-def bp_gstep(g: jax.Array, w: jax.Array, z: jax.Array, *,
+def _kernel_int8(g_ref, w_ref, z_ref, meta_ref, o_ref, acc_ref, *,
+                 n_k: int, g_bits, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += int8_dot(g_ref[...], w_ref[...], _GW_DIMS)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        y = acc_ref[...].astype(jnp.float32) * meta_ref[0]
+        if z_ref is not None:
+            y = y * act_deriv(z_ref[...].astype(jnp.float32), act)
+        o_ref[...] = maybe_kq(y, g_bits)
+
+
+def bp_gstep(g: jax.Array, w: jax.Array, z: Optional[jax.Array], *,
              g_bits=(2, 12), act: str = "relu",
              bm: int = 128, bn: int = 128, bk: int = 128,
-             interpret: bool = False) -> jax.Array:
-    """g: [T, Dout]; w: [Din, Dout]; z: [T, Din]. Returns G_i [T, Din] f32."""
+             interpret: bool = False,
+             datapath: str = "emulate",
+             scale: Optional[jax.Array] = None) -> jax.Array:
+    """g: [T, Dout]; w: [Din, Dout]; z: [T, Din] or None. Returns [T, Din] f32.
+
+    int8 datapath: g/w are int8 payloads, ``scale`` = s_g * s_w.
+    """
     t, dout = g.shape
     din, dout2 = w.shape
-    assert dout == dout2 and z.shape == (t, din)
+    assert dout == dout2
+    if z is None:
+        assert act == "identity", act
+    else:
+        assert z.shape == (t, din)
     bm, bn, bk = min(bm, t), min(bn, din), min(bk, dout)
     assert t % bm == 0 and din % bn == 0 and dout % bk == 0
     n_k = dout // bk
 
     grid = (t // bm, din // bn, n_k)
+    g_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))       # G
+    w_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))       # W (T via dot dims)
+    z_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))       # Z
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    params = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    out_shape = jax.ShapeDtypeStruct((t, din), jnp.float32)
+
+    if datapath == "int8":
+        assert g.dtype == jnp.int8 and w.dtype == jnp.int8, (g.dtype, w.dtype)
+        assert scale is not None, "int8 datapath needs the combined scale"
+        meta = jnp.asarray(scale, jnp.float32).reshape(1)
+        in_specs = [g_spec, w_spec]
+        args = [g, w]
+        if z is not None:
+            in_specs.append(z_spec)
+            args.append(z)
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        args.append(meta)
+
+        def kern(*refs):
+            if z is not None:
+                g_r, w_r, z_r, m_r, o_r, a_r = refs
+            else:
+                g_r, w_r, m_r, o_r, a_r = refs
+                z_r = None
+            _kernel_int8(g_r, w_r, z_r, m_r, o_r, a_r, n_k=n_k,
+                         g_bits=g_bits, act=act)
+
+        return pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=o_spec,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            compiler_params=params, interpret=interpret,
+        )(*args)
+
+    assert datapath == "emulate", datapath
+    in_specs = [g_spec, w_spec]
+    args = [g, w]
+    if z is not None:
+        in_specs.append(z_spec)
+        args.append(z)
+
+    def kern(*refs):
+        if z is not None:
+            g_r, w_r, z_r, o_r = refs
+        else:
+            g_r, w_r, o_r = refs
+            z_r = None
+        _kernel(g_r, w_r, z_r, o_r, n_k=n_k, g_bits=g_bits, act=act)
+
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, g_bits=g_bits, act=act),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # G
-            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),   # W (transposed via dot dims)
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # Z
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((t, din), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(g, w, z)
+        kern, grid=grid, in_specs=in_specs, out_specs=o_spec,
+        out_shape=out_shape, compiler_params=params, interpret=interpret,
+    )(*args)

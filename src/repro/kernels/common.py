@@ -11,6 +11,7 @@ same values in f32.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -23,6 +24,27 @@ def kq(x, i_bits: int, f_bits: int):
     return k * step
 
 
+def maybe_kq(x, bits):
+    """kq with ``bits=None`` meaning passthrough (unquantized datapath)."""
+    return x if bits is None else kq(x, *bits)
+
+
+def int8_dot(a, b, dims=None):
+    """int8 x int8 -> int32 MAC: the MXU low-bit path (paper's PE array).
+
+    ``dims`` follows ``lax.dot_general`` dimension_numbers; default is a
+    plain [M,K]x[K,N] matmul.  Accumulation is exact int32 (the paper's
+    wide accumulator registers — no rounding until the final rescale).
+    """
+    if dims is None:
+        return jnp.dot(a, b, preferred_element_type=jnp.int32)
+    return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.int32)
+
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
 def act_fn(z, kind: str):
     if kind == "relu":
         return jnp.maximum(z, 0.0)
@@ -32,6 +54,8 @@ def act_fn(z, kind: str):
         return jnp.tanh(z)
     if kind == "silu":
         return z / (1.0 + jnp.exp(-z))
+    if kind == "gelu":  # tanh approximation (matches jax.nn.gelu approximate)
+        return 0.5 * z * (1.0 + jnp.tanh(_GELU_C * (z + _GELU_A * z * z * z)))
     if kind == "identity":
         return z
     raise ValueError(kind)
@@ -52,6 +76,11 @@ def act_deriv(z, kind: str):
     if kind == "silu":
         s = 1.0 / (1.0 + jnp.exp(-z))
         return s * (1.0 + z * (1.0 - s))
+    if kind == "gelu":
+        u = _GELU_C * (z + _GELU_A * z * z * z)
+        t = jnp.tanh(u)
+        du = _GELU_C * (1.0 + 3.0 * _GELU_A * z * z)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
     if kind == "identity":
         return jnp.ones_like(z)
     raise ValueError(kind)

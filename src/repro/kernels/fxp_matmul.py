@@ -1,23 +1,34 @@
 """fxp_matmul: fixed-point (I,F) quantized matmul + fused activation.
 
-The TaxoNN PE datapath's forward op: y = f(q_a(X) @ q_w(W)), with the
-MAC emulated at fixed point and a f32 (wide-register) accumulator.
+The TaxoNN PE datapath's forward op: y = f(q_a(X) @ q_w(W)).  Two datapaths
+share one tiling:
+
+  * ``datapath="emulate"`` — the MAC emulated at f32 with in-kernel (I,F)
+    round-to-nearest (kq) and a f32 accumulator.  This is the CPU/interpret
+    reference path and the pre-int8 behaviour.
+  * ``datapath="int8"``    — X and W arrive as int8 payloads (the
+    block-scaled storage format of ``repro.quant.int8``); the MAC runs as
+    ``dot(int8, int8) -> int32`` on the MXU with an exact int32 VMEM
+    accumulator (the paper's wide accumulator registers), and the combined
+    scale ``s_x * s_w`` is applied once at the final k step — followed by
+    the fused activation and optional output re-quantization.
 
 Tiling: grid (M/bm, N/bn, K/bk); X block [bm,bk] and W block [bk,bn] live
-in VMEM; the [bm,bn] output block accumulates in f32 across the k steps
-(revisiting semantics: k is the innermost, "arbitrary" dimension).  Block
-defaults are MXU-aligned (multiples of 128 on the contracted dims).
+in VMEM; the [bm,bn] accumulator lives across the k steps (revisiting
+semantics: k is the innermost, "arbitrary" dimension).  Block defaults are
+MXU-aligned (multiples of 128 on the contracted dims).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import act_fn, kq
+from repro.kernels.common import act_fn, int8_dot, maybe_kq
 
 
 def _kernel(x_ref, w_ref, o_ref, *, n_k: int, xa_bits, w_bits, out_bits,
@@ -28,16 +39,33 @@ def _kernel(x_ref, w_ref, o_ref, *, n_k: int, xa_bits, w_bits, out_bits,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    xq = kq(x_ref[...], *xa_bits)
-    wq = kq(w_ref[...], *w_bits)
+    xq = maybe_kq(x_ref[...].astype(jnp.float32), xa_bits)
+    wq = maybe_kq(w_ref[...].astype(jnp.float32), w_bits)
     acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
     o_ref[...] += acc
 
     @pl.when(k == n_k - 1)
     def _finish():
         y = act_fn(o_ref[...], act)
-        if out_bits is not None:
-            y = kq(y, *out_bits)
+        y = maybe_kq(y, out_bits)
+        o_ref[...] = y
+
+
+def _kernel_int8(x_ref, w_ref, meta_ref, o_ref, acc_ref, *, n_k: int,
+                 out_bits, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += int8_dot(x_ref[...], w_ref[...])
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        # one rescale out of the wide accumulator, then the fused activation
+        y = act_fn(acc_ref[...].astype(jnp.float32) * meta_ref[0], act)
+        y = maybe_kq(y, out_bits)
         o_ref[...] = y
 
 
@@ -45,8 +73,16 @@ def fxp_matmul(x: jax.Array, w: jax.Array, *,
                xa_bits=(4, 10), w_bits=(2, 12), out_bits=(4, 10),
                act: str = "identity",
                bm: int = 128, bn: int = 128, bk: int = 128,
-               interpret: bool = False) -> jax.Array:
-    """x: [M, K] f32/bf16; w: [K, N]. Returns f32 [M, N]."""
+               interpret: bool = False,
+               datapath: str = "emulate",
+               scale: Optional[jax.Array] = None) -> jax.Array:
+    """x: [M, K]; w: [K, N]. Returns f32 [M, N].
+
+    emulate: x/w f32 or bf16, quantized in-kernel by (xa_bits, w_bits)
+             (``None`` bits = passthrough).
+    int8:    x/w int8 payloads; ``scale`` is the combined dequant scale
+             s_x * s_w (traced f32 scalar or Python float).
+    """
     m, kdim = x.shape
     k2, n = w.shape
     assert kdim == k2
@@ -56,17 +92,36 @@ def fxp_matmul(x: jax.Array, w: jax.Array, *,
     n_k = kdim // bk
 
     grid = (m // bm, n // bn, n_k)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    params = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    if datapath == "int8":
+        assert x.dtype == jnp.int8 and w.dtype == jnp.int8, (x.dtype, w.dtype)
+        assert scale is not None, "int8 datapath needs the combined scale"
+        meta = jnp.asarray(scale, jnp.float32).reshape(1)
+        return pl.pallas_call(
+            functools.partial(_kernel_int8, n_k=n_k, out_bits=out_bits,
+                              act=act),
+            grid=grid,
+            in_specs=[x_spec, w_spec, pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            compiler_params=params,
+            interpret=interpret,
+        )(x, w, meta)
+
+    assert datapath == "emulate", datapath
     return pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, xa_bits=xa_bits, w_bits=w_bits,
                           out_bits=out_bits, act=act),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        in_specs=[x_spec, w_spec],
+        out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=params,
         interpret=interpret,
     )(x, w)

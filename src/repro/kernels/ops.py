@@ -1,58 +1,336 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public entry points for the TaxoNN Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and False on TPU,
-where the Mosaic-compiled kernels run natively.  The wrappers pick
-MXU-aligned block sizes that divide the operand shapes.
+Three layers live here:
+
+  * ``KernelBackend`` — the trace-time knob selecting the datapath for the
+    training/serving hot paths: ``"off"`` (pure jnp, the pre-kernel
+    behaviour), ``"emulate"`` (Pallas kernels, f32 (I,F) emulation), and
+    ``"int8"`` (int8 MXU operands with int32 wide accumulators).  ``"auto"``
+    resolves to "off" on CPU and "int8" on TPU.  Installed with
+    ``kernel_backend_ctx`` and read by ``models.layers.dense_unit``,
+    ``core.steps.make_train_step`` and ``serving.engine.prefill``.
+
+  * A small **autotuner** (``tune_blocks``) replacing the old power-of-two
+    halving ``_pick``: it enumerates MXU-aligned candidate blocks (>= 8,
+    sublane/lane friendly) that divide the operand dims, estimates the VMEM
+    footprint (double-buffered inputs + output + accumulator), and keeps
+    the 128-aligned choice with the largest tile volume under the budget.
+    Choices are cached per (shape, itemsize).  When a dim has **no**
+    aligned divisor >= 8 (odd/prime dims — the old code degraded to
+    pathological 1-wide grids), it returns None and every wrapper falls
+    back to the jnp oracle in ``ref.py``.
+
+  * Jit'd wrappers (``*_op``) with ``interpret=True`` on CPU and
+    Mosaic-compiled kernels on TPU, plus the ``dense_*`` helpers that the
+    ``custom_vjp`` dense unit builds its forward/backward from (operand
+    quantization with traced absmax scales on the int8 path).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import ref
+from repro.kernels.bp_fused_unit import bp_fused_unit
 from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.common import int8_dot
 from repro.kernels.fxp_matmul import fxp_matmul
 from repro.kernels.sgd_dw_update import sgd_dw_update
+from repro.quant.int8 import quantize_int8_absmax, quantize_int8_auto
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _pick(block: int, dim: int) -> int:
-    b = min(block, dim)
-    while dim % b:
-        b //= 2
-    return max(b, 1)
+# ---------------------------------------------------------------------------
+# KernelBackend knob
+# ---------------------------------------------------------------------------
+
+KERNEL_BACKENDS = ("off", "emulate", "int8")
+
+_BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "kernel_backend", default="off")
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Resolve ``None``/"auto" to the platform default (off on CPU — the
+    interpreter-mode kernels would only slow tests down — int8 on TPU)."""
+    if backend is None or backend == "auto":
+        return "off" if _on_cpu() else "int8"
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"kernel_backend {backend!r} not in {KERNEL_BACKENDS + ('auto',)}")
+    return backend
+
+
+@contextlib.contextmanager
+def kernel_backend_ctx(backend: Optional[str]):
+    """Install a kernel backend for the enclosed trace (like perf options)."""
+    token = _BACKEND.set(resolve_backend(backend))
+    try:
+        yield
+    finally:
+        _BACKEND.reset(token)
+
+
+def current_backend() -> str:
+    return _BACKEND.get()
+
+
+# ---------------------------------------------------------------------------
+# Block autotuner
+# ---------------------------------------------------------------------------
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # half of a ~16MB VMEM core
+_MAX_BLOCK = 2048
+
+
+def _candidates(dim: int) -> list:
+    """Sublane-aligned blocks (multiples of 8) dividing ``dim``, descending.
+    Empty when no aligned block >= 8 divides the dim (odd/prime shapes)."""
+    start = (min(dim, _MAX_BLOCK) // 8) * 8
+    return [b for b in range(start, 7, -8) if dim % b == 0]
+
+
+@functools.lru_cache(maxsize=None)
+def tune_blocks(m: int, n: int, k: int, itemsize: int = 4,
+                acc_itemsize: int = 4) -> Optional[tuple]:
+    """Pick (bm, bn, bk) for a [m,k]x[k,n]-shaped kernel grid.
+
+    Returns None when some dim has no aligned divisor >= 8 — callers fall
+    back to the jnp reference path instead of degrading to 1-wide blocks.
+    """
+    cm, cn, ck = _candidates(m), _candidates(n), _candidates(k)
+    if not (cm and cn and ck):
+        return None
+    best, best_key = None, None
+    for bm in cm:
+        for bn in cn:
+            for bk in ck:
+                # double-buffered input blocks + resident output + accumulator
+                vmem = (2 * (bm * bk + bk * bn) * itemsize
+                        + bm * bn * (4 + acc_itemsize))
+                if vmem > VMEM_BUDGET_BYTES:
+                    continue
+                mxu = sum(b % 128 == 0 or b == full
+                          for b, full in ((bm, m), (bn, n), (bk, k)))
+                key = (mxu, bm * bn * bk, min(bm, bn))
+                if best_key is None or key > best_key:
+                    best, best_key = (bm, bn, bk), key
+    return best
+
+
+def tune_fused(t: int, din: int, dout: int, itemsize: int = 4,
+               acc_itemsize: int = 4) -> Optional[int]:
+    """Token-block size for bp_fused_unit (W + dW accumulator stay resident);
+    None when the frame cannot fit VMEM or t has no aligned divisor."""
+    ct = _candidates(t)
+    if not ct or not _candidates(din) or not _candidates(dout):
+        return None
+    # W (f32) + dW accumulator + the cached q_w(W) scratch
+    resident = din * dout * (4 + acc_itemsize + itemsize)
+    for bt in ct:
+        stream = 2 * (bt * dout + 2 * bt * din) * itemsize + bt * din * 4
+        if resident + stream <= VMEM_BUDGET_BYTES:
+            return bt
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Jit'd wrappers (ref fallback on untileable shapes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "xa_bits", "w_bits", "out_bits", "act", "datapath"))
+def fxp_matmul_op(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
+                  out_bits=(4, 10), act="identity", datapath="emulate"):
+    m, k = x.shape
+    n = w.shape[1]
+    blocks = tune_blocks(m, n, k, itemsize=1 if datapath == "int8" else 4)
+    if datapath == "int8":
+        if blocks is None:
+            return ref.fxp_matmul_int8_ref(x, w, xa_bits=xa_bits,
+                                           w_bits=w_bits, out_bits=out_bits,
+                                           act=act)
+        qx, sx = quantize_int8_auto(x, xa_bits)
+        qw, sw = quantize_int8_auto(w, w_bits)
+        bm, bn, bk = blocks
+        return fxp_matmul(qx, qw, out_bits=out_bits, act=act,
+                          bm=bm, bn=bn, bk=bk, datapath="int8",
+                          scale=sx * sw, interpret=_on_cpu())
+    if blocks is None:
+        return ref.fxp_matmul_ref(x, w, xa_bits=xa_bits, w_bits=w_bits,
+                                  out_bits=out_bits, act=act)
+    bm, bn, bk = blocks
+    return fxp_matmul(x, w, xa_bits=xa_bits, w_bits=w_bits,
+                      out_bits=out_bits, act=act,
+                      bm=bm, bn=bn, bk=bk, interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "xa_bits", "w_bits", "out_bits", "act"))
-def fxp_matmul_op(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
-                  out_bits=(4, 10), act="identity"):
-    m, k = x.shape
-    n = w.shape[1]
-    return fxp_matmul(
-        x, w, xa_bits=xa_bits, w_bits=w_bits, out_bits=out_bits, act=act,
-        bm=_pick(128, m), bn=_pick(128, n), bk=_pick(128, k),
-        interpret=_on_cpu())
-
-
-@functools.partial(jax.jit, static_argnames=("g_bits", "act"))
-def bp_gstep_op(g, w, z, *, g_bits=(2, 12), act="relu"):
+    "g_bits", "act", "datapath", "g_in_bits", "w_bits"))
+def bp_gstep_op(g, w, z, *, g_bits=(2, 12), act="relu", datapath="emulate",
+                g_in_bits=(2, 12), w_bits=(2, 12)):
     t, dout = g.shape
     din = w.shape[0]
-    return bp_gstep(
-        g, w, z, g_bits=g_bits, act=act,
-        bm=_pick(128, t), bn=_pick(128, din), bk=_pick(128, dout),
-        interpret=_on_cpu())
+    blocks = tune_blocks(t, din, dout, itemsize=1 if datapath == "int8" else 4)
+    if datapath == "int8":
+        if blocks is None:
+            return ref.bp_gstep_int8_ref(g, w, z, g_in_bits=g_in_bits,
+                                         w_bits=w_bits, g_bits=g_bits, act=act)
+        qg, sg = quantize_int8_auto(g, g_in_bits)
+        qw, sw = quantize_int8_auto(w, w_bits)
+        bm, bn, bk = blocks
+        return bp_gstep(qg, qw, z, g_bits=g_bits, act=act,
+                        bm=bm, bn=bn, bk=bk, datapath="int8",
+                        scale=sg * sw, interpret=_on_cpu())
+    if blocks is None:
+        return ref.bp_gstep_ref(g, w, z, g_bits=g_bits, act=act)
+    bm, bn, bk = blocks
+    return bp_gstep(g, w, z, g_bits=g_bits, act=act,
+                    bm=bm, bn=bn, bk=bk, interpret=_on_cpu())
 
 
-@functools.partial(jax.jit, static_argnames=("w_bits",))
-def sgd_dw_update_op(x, g, w, lr, *, w_bits=None):
+@functools.partial(jax.jit, static_argnames=(
+    "w_bits", "datapath", "xa_bits", "g_in_bits"))
+def sgd_dw_update_op(x, g, w, lr, *, w_bits=None, datapath="emulate",
+                     xa_bits=(4, 10), g_in_bits=(2, 12)):
     t, din = x.shape
     dout = g.shape[1]
-    return sgd_dw_update(
-        x, g, w, lr, w_bits=w_bits,
-        bm=_pick(128, din), bn=_pick(128, dout), bk=_pick(128, t),
-        interpret=_on_cpu())
+    blocks = tune_blocks(din, dout, t, itemsize=1 if datapath == "int8" else 4)
+    if datapath == "int8":
+        if blocks is None:
+            return ref.sgd_dw_update_int8_ref(x, g, w, lr, xa_bits=xa_bits,
+                                              g_in_bits=g_in_bits,
+                                              w_bits=w_bits)
+        qx, sx = quantize_int8_auto(x, xa_bits)
+        qg, sg = quantize_int8_auto(g, g_in_bits)
+        bm, bn, bk = blocks
+        return sgd_dw_update(qx, qg, w, lr, w_bits=w_bits,
+                             bm=bm, bn=bn, bk=bk, datapath="int8",
+                             scale=sx * sg, interpret=_on_cpu())
+    if blocks is None:
+        return ref.sgd_dw_update_ref(x, g, w, lr, w_bits=w_bits)
+    bm, bn, bk = blocks
+    return sgd_dw_update(x, g, w, lr, w_bits=w_bits,
+                         bm=bm, bn=bn, bk=bk, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "g_bits", "w_bits", "w_out_bits", "act", "datapath", "g_in_bits",
+    "xa_bits"))
+def bp_fused_unit_op(g, w, x, z, lr, *, g_bits=(2, 12), w_bits=(2, 12),
+                     w_out_bits=None, act="relu", datapath="emulate",
+                     g_in_bits=(2, 12), xa_bits=(4, 10)):
+    """One TDM frame (see bp_fused_unit); falls back to the sequential jnp
+    oracle when the frame cannot be tiled/fit."""
+    t, dout = g.shape
+    din = w.shape[0]
+    bt = tune_fused(t, din, dout, itemsize=1 if datapath == "int8" else 4)
+    if datapath == "int8":
+        if bt is None:
+            return ref.bp_fused_unit_int8_ref(
+                g, w, x, z, lr, g_in_bits=g_in_bits, xa_bits=xa_bits,
+                g_bits=g_bits, w_bits=w_bits, w_out_bits=w_out_bits, act=act)
+        qg, sg = quantize_int8_auto(g, g_in_bits)
+        qx, sx = quantize_int8_auto(x, xa_bits)
+        return bp_fused_unit(qg, w, qx, z, lr, g_bits=g_bits, w_bits=w_bits,
+                             w_out_bits=w_out_bits, act=act, bt=bt,
+                             datapath="int8", g_scale=sg, x_scale=sx,
+                             interpret=_on_cpu())
+    if bt is None:
+        return ref.bp_fused_unit_ref(g, w, x, z, lr, g_bits=g_bits,
+                                     w_bits=w_bits, w_out_bits=w_out_bits,
+                                     act=act)
+    return bp_fused_unit(g, w, x, z, lr, g_bits=g_bits, w_bits=w_bits,
+                         w_out_bits=w_out_bits, act=act, bt=bt,
+                         interpret=_on_cpu())
+
+
+# ---------------------------------------------------------------------------
+# dense_unit building blocks (traced absmax scales; no in-kernel (I,F) —
+# the engine's STE wrappers own the (I,F) grid on these paths)
+# ---------------------------------------------------------------------------
+
+def dense_fwd(x2, w, backend: str):
+    """z = x2 @ w at f32 through the selected datapath. x2: [M,K], w: [K,N].
+
+    Returns the raw pre-activation z — the caller applies the activation
+    (and keeps z for the backward derivation unit).
+    """
+    m, k = x2.shape
+    n = w.shape[1]
+    if backend == "int8":
+        qx, sx = quantize_int8_absmax(x2)
+        qw, sw = quantize_int8_absmax(w)
+        blocks = tune_blocks(m, n, k, itemsize=1)
+        if blocks is None:
+            return int8_dot(qx, qw).astype(jnp.float32) * (sx * sw)
+        bm, bn, bk = blocks
+        return fxp_matmul(qx, qw, out_bits=None, act="identity",
+                          bm=bm, bn=bn, bk=bk, datapath="int8",
+                          scale=sx * sw, interpret=_on_cpu())
+    blocks = tune_blocks(m, n, k)
+    if blocks is None:
+        return jnp.dot(x2.astype(jnp.float32), w.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    bm, bn, bk = blocks
+    return fxp_matmul(x2.astype(jnp.float32), w.astype(jnp.float32),
+                      xa_bits=None, w_bits=None, out_bits=None,
+                      act="identity", bm=bm, bn=bn, bk=bk,
+                      interpret=_on_cpu())
+
+
+def dense_bwd_dx(dz, w, backend: str):
+    """dx = dz @ w^T via bp_gstep. dz: [M,N], w: [K,N]... note orientation:
+    here w is [K, N] so bp_gstep's (g [T,Dout], w [Din,Dout]) maps to
+    (dz [M,N], w [K,N]) -> [M,K]."""
+    m, n = dz.shape
+    k = w.shape[0]
+    if backend == "int8":
+        qg, sg = quantize_int8_absmax(dz)
+        qw, sw = quantize_int8_absmax(w)
+        blocks = tune_blocks(m, k, n, itemsize=1)
+        if blocks is None:
+            return int8_dot(qg, qw.T).astype(jnp.float32) * (sg * sw)
+        bm, bn, bk = blocks
+        return bp_gstep(qg, qw, None, g_bits=None, act="identity",
+                        bm=bm, bn=bn, bk=bk, datapath="int8",
+                        scale=sg * sw, interpret=_on_cpu())
+    blocks = tune_blocks(m, k, n)
+    if blocks is None:
+        return jnp.dot(dz, w.astype(jnp.float32).T,
+                       preferred_element_type=jnp.float32)
+    bm, bn, bk = blocks
+    return bp_gstep(dz, w.astype(jnp.float32), None, g_bits=None,
+                    act="identity", bm=bm, bn=bn, bk=bk,
+                    interpret=_on_cpu())
+
+
+def dense_bwd_dw(x2, dz, backend: str):
+    """dw = x2^T @ dz via the dW-only form of sgd_dw_update."""
+    m, k = x2.shape
+    n = dz.shape[1]
+    if backend == "int8":
+        qx, sx = quantize_int8_absmax(x2)
+        qg, sg = quantize_int8_absmax(dz)
+        blocks = tune_blocks(k, n, m, itemsize=1)
+        if blocks is None:
+            return int8_dot(qx.T, qg).astype(jnp.float32) * (sx * sg)
+        bm, bn, bk = blocks
+        return sgd_dw_update(qx, qg, None, 0.0, bm=bm, bn=bn, bk=bk,
+                             datapath="int8", scale=sx * sg,
+                             interpret=_on_cpu())
+    blocks = tune_blocks(k, n, m)
+    if blocks is None:
+        return jnp.dot(x2.astype(jnp.float32).T, dz,
+                       preferred_element_type=jnp.float32)
+    bm, bn, bk = blocks
+    return sgd_dw_update(x2.astype(jnp.float32), dz, None, 0.0,
+                         bm=bm, bn=bn, bk=bk, interpret=_on_cpu())

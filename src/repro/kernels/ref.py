@@ -1,35 +1,98 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel has two oracles: the f32 (I,F)-emulation reference (``*_ref``)
+and the int8-datapath reference (``*_int8_ref``) that quantizes the
+operands onto their (I,F)-derived int8 grids, runs the MAC at int32, and
+rescales — bit-identical (up to f32 rescale rounding) to what the int8
+kernels compute, so property tests can assert tight tolerances.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import act_deriv, act_fn, kq
+from repro.kernels.common import act_deriv, act_fn, int8_dot, maybe_kq
+from repro.quant.int8 import quantize_int8_auto
 
 
 def fxp_matmul_ref(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
                    out_bits=(4, 10), act="identity"):
-    xq = kq(x, *xa_bits)
-    wq = kq(w, *w_bits)
+    xq = maybe_kq(x.astype(jnp.float32), xa_bits)
+    wq = maybe_kq(w.astype(jnp.float32), w_bits)
     y = act_fn(jnp.dot(xq, wq, preferred_element_type=jnp.float32), act)
-    if out_bits is not None:
-        y = kq(y, *out_bits)
-    return y
+    return maybe_kq(y, out_bits)
 
 
 def bp_gstep_ref(g, w, z, *, g_bits=(2, 12), act="relu"):
     gi = jnp.dot(g.astype(jnp.float32), w.astype(jnp.float32).T,
                  preferred_element_type=jnp.float32)
-    gi = gi * act_deriv(z.astype(jnp.float32), act)
-    if g_bits is not None:
-        gi = kq(gi, *g_bits)
-    return gi
+    if z is not None:
+        gi = gi * act_deriv(z.astype(jnp.float32), act)
+    return maybe_kq(gi, g_bits)
 
 
 def sgd_dw_update_ref(x, g, w, lr, *, w_bits=None):
     dw = jnp.dot(x.astype(jnp.float32).T, g.astype(jnp.float32),
                  preferred_element_type=jnp.float32)
+    if w is None:
+        return maybe_kq(dw, w_bits)
     w_new = w.astype(jnp.float32) - lr * dw
-    if w_bits is not None:
-        w_new = kq(w_new, *w_bits)
-    return w_new
+    return maybe_kq(w_new, w_bits)
+
+
+def bp_fused_unit_ref(g, w, x, z, lr, *, g_bits=(2, 12), w_bits=(2, 12),
+                      w_out_bits=None, act="relu"):
+    """The TDM frame as three sequential jnp ops (Eq. 8 + Eq. 9 + Eq. 1)."""
+    gf = g.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    wq = maybe_kq(wf, w_bits)
+    go = jnp.dot(gf, wq.T, preferred_element_type=jnp.float32)
+    go = maybe_kq(go * act_deriv(z.astype(jnp.float32), act), g_bits)
+    dw = jnp.dot(x.astype(jnp.float32).T, gf,
+                 preferred_element_type=jnp.float32)
+    w_new = maybe_kq(wf - lr * dw, w_out_bits)
+    return go, w_new
+
+
+# ---------------------------------------------------------------------------
+# int8-datapath oracles (operands on the (I,F)-derived int8 grid, int32 MACs)
+# ---------------------------------------------------------------------------
+
+def fxp_matmul_int8_ref(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
+                        out_bits=(4, 10), act="identity"):
+    qx, sx = quantize_int8_auto(x, xa_bits)
+    qw, sw = quantize_int8_auto(w, w_bits)
+    y = int8_dot(qx, qw).astype(jnp.float32) * (sx * sw)
+    return maybe_kq(act_fn(y, act), out_bits)
+
+
+def bp_gstep_int8_ref(g, w, z, *, g_in_bits=(2, 12), w_bits=(2, 12),
+                      g_bits=(2, 12), act="relu"):
+    qg, sg = quantize_int8_auto(g, g_in_bits)
+    qw, sw = quantize_int8_auto(w, w_bits)
+    gi = int8_dot(qg, qw.T).astype(jnp.float32) * (sg * sw)
+    if z is not None:
+        gi = gi * act_deriv(z.astype(jnp.float32), act)
+    return maybe_kq(gi, g_bits)
+
+
+def sgd_dw_update_int8_ref(x, g, w, lr, *, xa_bits=(4, 10),
+                           g_in_bits=(2, 12), w_bits=None):
+    qx, sx = quantize_int8_auto(x, xa_bits)
+    qg, sg = quantize_int8_auto(g, g_in_bits)
+    dw = int8_dot(qx.T, qg).astype(jnp.float32) * (sx * sg)
+    if w is None:
+        return maybe_kq(dw, w_bits)
+    return maybe_kq(w.astype(jnp.float32) - lr * dw, w_bits)
+
+
+def bp_fused_unit_int8_ref(g, w, x, z, lr, *, g_in_bits=(2, 12),
+                           xa_bits=(4, 10), g_bits=(2, 12), w_bits=(2, 12),
+                           w_out_bits=None, act="relu"):
+    qg, sg = quantize_int8_auto(g, g_in_bits)
+    qx, sx = quantize_int8_auto(x, xa_bits)
+    qw, sw = quantize_int8_auto(w, w_bits)
+    go = int8_dot(qg, qw.T).astype(jnp.float32) * (sg * sw)
+    go = maybe_kq(go * act_deriv(z.astype(jnp.float32), act), g_bits)
+    dw = int8_dot(qx.T, qg).astype(jnp.float32) * (sx * sg)
+    w_new = maybe_kq(w.astype(jnp.float32) - lr * dw, w_out_bits)
+    return go, w_new

@@ -8,19 +8,33 @@ exists in HBM.  This is the TaxoNN fused-update property (gradient
 lifetime = one PE pass) expressed at the memory-hierarchy level that
 matters on TPU.
 
-Shapes: X [T, Din], G [T, Dout], W [Din, Dout] -> W_new [Din, Dout].
+Datapaths: ``emulate`` accumulates the outer product at f32; ``int8`` takes
+X and G as int8 payloads (the activation and gradient storage formats), runs
+the MAC as int8 x int8 -> int32 with an exact int32 VMEM accumulator, and
+rescales by s_x * s_g once at the final step, where the master-weight f32
+update happens.
+
+``w=None`` turns the kernel into its dW-only form (returns X^T @ G, no
+update) — the shape emitted to ``custom_vjp`` backward rules and the int8
+tile source for the compressed dW all-reduce.
+
+Shapes: X [T, Din], G [T, Dout], W [Din, Dout] -> [Din, Dout].
 Grid (Din/bm, Dout/bn, T/bk): the contraction is over tokens.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import kq
+from repro.kernels.common import int8_dot, maybe_kq
+
+# (X block [bk, bm])^T @ G block [bk, bn] -> [bm, bn]
+_XG_DIMS = (((0,), (0,)), ((), ()))
 
 
 def _kernel(x_ref, g_ref, w_ref, lr_ref, o_ref, *, n_k: int, w_bits):
@@ -30,47 +44,117 @@ def _kernel(x_ref, g_ref, w_ref, lr_ref, o_ref, *, n_k: int, w_bits):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # (X block [bk, bm])^T @ G block [bk, bn] -> [bm, bn]
-    acc = jax.lax.dot_general(
-        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    acc = jax.lax.dot_general(x_ref[...], g_ref[...], _XG_DIMS,
+                              preferred_element_type=jnp.float32)
     o_ref[...] += acc
 
     @pl.when(k == n_k - 1)
     def _finish():
-        w_new = w_ref[...].astype(jnp.float32) - lr_ref[0] * o_ref[...]
-        if w_bits is not None:
-            w_new = kq(w_new, *w_bits)
-        o_ref[...] = w_new
+        if w_ref is None:
+            o_ref[...] = maybe_kq(o_ref[...], w_bits)
+        else:
+            w_new = w_ref[...].astype(jnp.float32) - lr_ref[0] * o_ref[...]
+            o_ref[...] = maybe_kq(w_new, w_bits)
 
 
-def sgd_dw_update(x: jax.Array, g: jax.Array, w: jax.Array, lr,
+def _kernel_int8(x_ref, g_ref, w_ref, meta_ref, o_ref, acc_ref, *,
+                 n_k: int, w_bits):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += int8_dot(x_ref[...], g_ref[...], _XG_DIMS)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        dw = acc_ref[...].astype(jnp.float32) * meta_ref[0]  # s_x * s_g
+        if w_ref is None:
+            o_ref[...] = maybe_kq(dw, w_bits)
+        else:
+            w_new = w_ref[...].astype(jnp.float32) - meta_ref[1] * dw
+            o_ref[...] = maybe_kq(w_new, w_bits)
+
+
+def sgd_dw_update(x: jax.Array, g: jax.Array, w: Optional[jax.Array], lr,
                   *, w_bits=None,
                   bm: int = 128, bn: int = 128, bk: int = 128,
-                  interpret: bool = False) -> jax.Array:
-    """x: [T, Din]; g: [T, Dout]; w: [Din, Dout]; lr scalar.
-    Returns W - lr * x^T g (optionally re-quantized to (I,F))."""
+                  interpret: bool = False,
+                  datapath: str = "emulate",
+                  scale: Optional[jax.Array] = None) -> jax.Array:
+    """x: [T, Din]; g: [T, Dout]; w: [Din, Dout] or None; lr scalar.
+
+    Returns W - lr * x^T g (optionally re-quantized to (I,F)), or the raw
+    dW = x^T g when ``w is None``.  int8 datapath: x/g are int8 payloads,
+    ``scale`` = s_x * s_g.
+    """
     t, din = x.shape
     t2, dout = g.shape
-    assert t == t2 and w.shape == (din, dout)
+    assert t == t2
+    if w is not None:
+        assert w.shape == (din, dout)
     bm, bn, bk = min(bm, din), min(bn, dout), min(bk, t)
     assert din % bm == 0 and dout % bn == 0 and t % bk == 0
     n_k = t // bk
 
-    lr_arr = jnp.asarray([lr], jnp.float32)
     grid = (din // bm, dout // bn, n_k)
+    x_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))   # X
+    g_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))   # G
+    w_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))   # W
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
+    params = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    out_shape = jax.ShapeDtypeStruct((din, dout), jnp.float32)
+
+    if datapath == "int8":
+        assert x.dtype == jnp.int8 and g.dtype == jnp.int8, (x.dtype, g.dtype)
+        assert scale is not None, "int8 datapath needs the combined scale"
+        meta = jnp.stack([jnp.asarray(scale, jnp.float32),
+                          jnp.asarray(lr, jnp.float32)])
+        in_specs = [x_spec, g_spec]
+        args = [x, g]
+        if w is not None:
+            in_specs.append(w_spec)
+            args.append(w)
+        in_specs.append(any_spec)
+        args.append(meta)
+
+        def kern(*refs):
+            if w is not None:
+                x_r, g_r, w_r, m_r, o_r, a_r = refs
+            else:
+                x_r, g_r, m_r, o_r, a_r = refs
+                w_r = None
+            _kernel_int8(x_r, g_r, w_r, m_r, o_r, a_r, n_k=n_k, w_bits=w_bits)
+
+        return pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=o_spec,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            compiler_params=params, interpret=interpret,
+        )(*args)
+
+    assert datapath == "emulate", datapath
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    in_specs = [x_spec, g_spec]
+    args = [x, g]
+    if w is not None:
+        in_specs.append(w_spec)
+        args.append(w)
+    in_specs.append(any_spec)
+    args.append(lr_arr)
+
+    def kern(*refs):
+        if w is not None:
+            x_r, g_r, w_r, lr_r, o_r = refs
+        else:
+            x_r, g_r, lr_r, o_r = refs
+            w_r = None
+        _kernel(x_r, g_r, w_r, lr_r, o_r, n_k=n_k, w_bits=w_bits)
+
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, w_bits=w_bits),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),   # X
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # G
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # W
-            pl.BlockSpec(memory_space=pl.ANY),                # lr (scalar)
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((din, dout), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, g, w, lr_arr)
+        kern, grid=grid, in_specs=in_specs, out_specs=o_spec,
+        out_shape=out_shape, compiler_params=params, interpret=interpret,
+    )(*args)

@@ -76,6 +76,13 @@ def main(argv=None):
                     help="enable the TaxoNN per-layer (I,F) schedule")
     ap.add_argument("--engine", default="taxonn",
                     choices=["taxonn", "autodiff"])
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "off", "emulate", "int8"],
+                    help="dense-unit datapath (auto = off on CPU, int8 on "
+                         "TPU)")
+    ap.add_argument("--compress-dw", action="store_true",
+                    help="route per-layer dW through the int8 block-scaled "
+                         "wire format inside the backward scan")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-scale reduced twin of the arch")
     ap.add_argument("--ckpt-dir", default=None)
@@ -102,6 +109,8 @@ def main(argv=None):
     ocfg = OptimizerConfig(kind=args.optimizer, grad_clip=1.0)
     policy = (QuantPolicy(grad_scale=64.0) if args.quantize
               else QuantPolicy.off())
+    policy = dataclasses.replace(policy, kernel_backend=args.kernel_backend,
+                                 compress_dw=args.compress_dw)
     bits = default_bits(cfg, enabled=args.quantize)
     sched = cosine_schedule(args.lr, warmup=max(10, args.steps // 20),
                             total=args.steps)

@@ -20,6 +20,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.api import constrain, model_axis_size_ctx, perf_opt
+from repro.kernels import ops as kops
+from repro.kernels.common import act_deriv as _act_deriv, act_fn as _act_fn
 from repro.models.config import ModelConfig
 from repro.util.scan import xscan
 
@@ -92,6 +94,68 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# The kernel-datapath dense unit (TaxoNN PE array as a custom_vjp op)
+# ---------------------------------------------------------------------------
+#
+# ``dense_unit(x, w, act)`` computes act(x @ w) through the Pallas kernel
+# datapath selected by the ambient KernelBackend (see repro.kernels.ops):
+# forward is ``fxp_matmul``; backward emits ``bp_gstep`` (dx, Eq. 8's matmul
+# leg) and the dW-only form of ``sgd_dw_update`` (Eq. 9).  On the "int8"
+# backend the operands move as int8 payloads with traced absmax scales and
+# the MACs run int8 x int8 -> int32 — the paper's reuse of the inference
+# low-bit PEs for the training passes.  The engine's STE wrappers own the
+# (I,F) grid *around* this op, so the unit itself stays format-agnostic and
+# one compiled step still serves every bit schedule.
+#
+# With the backend "off" (the CPU default) callers skip this path entirely
+# and keep the original jnp einsums — bit-identical to the pre-kernel code.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _dense_unit(x, w, act, backend):
+    y, _ = _dense_unit_fwd(x, w, act, backend)
+    return y
+
+
+def _dense_unit_fwd(x, w, act, backend):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    z = kops.dense_fwd(x2, w, backend)              # f32 [M, N]
+    y = _act_fn(z, act).astype(x.dtype).reshape(shape[:-1] + (w.shape[1],))
+    # z is a per-layer residual: under the engine's remat-per-layer backward
+    # it lives only for one scan step (the paper's derivation-unit register)
+    return y, (x2, w, z if act != "identity" else None, shape)
+
+
+def _dense_unit_bwd(act, backend, res, dy):
+    x2, w, z, shape = res
+    dy2 = dy.reshape(-1, dy.shape[-1]).astype(jnp.float32)
+    dz = dy2 if z is None else dy2 * _act_deriv(z, act)
+    dx = kops.dense_bwd_dx(dz, w, backend)               # Eq. 8 matmul leg
+    dw = kops.dense_bwd_dw(x2, dz, backend)              # Eq. 9 outer product
+    return dx.reshape(shape).astype(x2.dtype), dw.astype(w.dtype)
+
+
+_dense_unit.defvjp(_dense_unit_fwd, _dense_unit_bwd)
+
+
+def dense_unit(x, w, act: str = "identity",
+               backend: Optional[str] = None) -> Array:
+    """act(x @ w) on the active kernel datapath. x: [..., K]; w: [K, N]."""
+    backend = backend or kops.current_backend()
+    if backend == "off":
+        return _act_fn((x @ w.astype(x.dtype)).astype(jnp.float32),
+                       act).astype(x.dtype)
+    return _dense_unit(x, w, act, backend)
+
+
+def _proj3(x: Array, w3: Array, backend: str) -> Array:
+    """Projection einsum "btd,dhk->bthk" through the dense unit."""
+    d, h, hd = w3.shape
+    y = _dense_unit(x, w3.reshape(d, h * hd), "identity", backend)
+    return y.reshape(x.shape[:-1] + (h, hd))
+
+
+# ---------------------------------------------------------------------------
 # Dense attention (GQA / MQA / SWA)
 # ---------------------------------------------------------------------------
 
@@ -132,9 +196,16 @@ def init_attention(key, cfg: ModelConfig):
 
 def _project_qkv(params, x, cfg: ModelConfig, positions):
     dt = x.dtype
-    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
-    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
-    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    backend = kops.current_backend()
+    if backend != "off":
+        # §Kernels: QKV projections on the TaxoNN kernel datapath
+        q = _proj3(x, params["wq"], backend)
+        k = _proj3(x, params["wk"], backend)
+        v = _proj3(x, params["wv"], backend)
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+        k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
     if cfg.qkv_bias:
         q = q + params["bq"].astype(dt)
         k = k + params["bk"].astype(dt)
@@ -256,7 +327,15 @@ def attention(params, x: Array, cfg: ModelConfig, positions: Array,
     else:
         mask = _attn_mask(t, t, causal, cfg.swa_window)
         out = _sdpa_full(q, kx, vx, mask, scale)
-    y = jnp.einsum("bthk,hkd->btd", out, _masked_wo(params, cfg, dt))
+    wo = _masked_wo(params, cfg, dt)
+    backend = kops.current_backend()
+    if backend != "off":
+        # §Kernels: output projection on the TaxoNN kernel datapath
+        h_, hd_, d_ = wo.shape
+        y = _dense_unit(out.reshape(b, t, h_ * hd_),
+                        wo.reshape(h_ * hd_, d_), "identity", backend)
+    else:
+        y = jnp.einsum("bthk,hkd->btd", out, wo)
     if return_kv:
         return y, (k, v)
     return y
@@ -447,6 +526,16 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
 
 def mlp(params, x: Array, cfg: ModelConfig) -> Array:
     dt = x.dtype
+    backend = kops.current_backend()
+    if backend != "off":
+        # §Kernels: the MLP matmuls on the TaxoNN kernel datapath
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            actk = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
+            g = _dense_unit(x, params["w_gate"], actk, backend)
+            u = _dense_unit(x, params["w_up"], "identity", backend)
+            return _dense_unit(g * u, params["w_down"], "identity", backend)
+        h = _dense_unit(x, params["w_up"], "gelu", backend)
+        return _dense_unit(h, params["w_down"], "identity", backend)
     if cfg.mlp_kind in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.mlp_kind == "swiglu" else functools.partial(
             jax.nn.gelu, approximate=True)

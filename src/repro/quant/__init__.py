@@ -22,6 +22,21 @@ from repro.quant.compression import (
     decompress_int8,
     quantized_allreduce_bytes,
 )
+from repro.quant.int8 import (
+    BlockScaledInt8,
+    Int8Spec,
+    absmax_scale,
+    dequantize_int8,
+    fxp_int8_bounds,
+    fxp_int8_scale,
+    int8_spec,
+    quantize_int8,
+    quantize_int8_absmax,
+    quantize_int8_auto,
+    quantize_int8_fxp,
+    quantize_int8_tiles,
+    transport_bits,
+)
 
 __all__ = [
     "QFormat",
@@ -36,4 +51,17 @@ __all__ = [
     "compress_int8",
     "decompress_int8",
     "quantized_allreduce_bytes",
+    "BlockScaledInt8",
+    "Int8Spec",
+    "absmax_scale",
+    "dequantize_int8",
+    "fxp_int8_bounds",
+    "fxp_int8_scale",
+    "int8_spec",
+    "quantize_int8",
+    "quantize_int8_absmax",
+    "quantize_int8_auto",
+    "quantize_int8_fxp",
+    "quantize_int8_tiles",
+    "transport_bits",
 ]

@@ -1,0 +1,203 @@
+"""Block-scaled int8 storage/compute format for the MXU kernel datapath.
+
+The paper's performance claim rests on executing training MACs on the same
+low-bitwidth units that serve inference.  On TPU the analogous unit is the
+int8 MXU path: ``dot(int8, int8, preferred_element_type=int32)`` runs at
+2-4x the f32 MAC rate with exact 32-bit accumulation (the paper's wide
+accumulator registers).  This module defines how a TaxoNN ``(I, F)``
+fixed-point tensor maps onto that path:
+
+  * A format with bitwidth ``I + F + 1 <= 8`` embeds **exactly**: the int8
+    payload is the fixed-point integer ``k`` itself and the scale is the
+    format's resolution ``2^-F``.
+  * A wider format keeps its 8 most significant bits: the bottom
+    ``I + F + 1 - 8`` fractional bits are dropped (shift = right-shift of
+    the fixed-point integer), i.e. the effective format is
+    ``(I, F - shift)`` — saturation behaviour is unchanged.
+
+Scales may be *static* Python floats (kernel-constant formats, e.g. the
+LeNet Table-I schedules) or *traced* f32 scalars (per-tensor absmax scaling
+in the runtime-bit engine path) — the kernels accept either through a small
+f32 meta operand.
+
+The per-tile storage container (``BlockScaledInt8``) reuses the absmax
+machinery of ``repro.quant.compression``: each tile stores int8 payload plus
+one f32 scale, where the scale is the (I,F)-derived step widened only for
+tiles whose absmax overflows the format's representable range (hardware
+would saturate; widening keeps the MSBs at the same bit budget).  A 2D tile
+of dW in this format is byte-compatible with the wire format that
+``dist.collectives.compressed_psum`` moves over ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fixed_point import _pow2_int
+
+Array = jax.Array
+
+INT8_BITS = 8
+TILE = (128, 128)  # default storage tile: one MXU face
+
+
+# ---------------------------------------------------------------------------
+# Static (Python-int) format mapping — for kernel-constant (I,F) formats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Int8Spec:
+    """How a static (I,F) format embeds into int8: q = clip(round(x/scale))."""
+
+    scale: float
+    qmin: int
+    qmax: int
+    shift: int  # dropped low fractional bits (0 when bitwidth <= 8)
+
+    @property
+    def exact(self) -> bool:
+        """True when the int8 grid equals the (I,F) grid (bitwidth <= 8)."""
+        return self.shift == 0
+
+
+def int8_spec(i_bits: int, f_bits: int) -> Int8Spec:
+    shift = max(0, i_bits + f_bits + 1 - INT8_BITS)
+    mag = 2 ** (i_bits + f_bits - shift)  # <= 2^7
+    return Int8Spec(scale=2.0 ** (shift - f_bits), qmin=-mag, qmax=mag - 1,
+                    shift=shift)
+
+
+# ---------------------------------------------------------------------------
+# Traced helpers — bits and scales as runtime data (no recompiles)
+# ---------------------------------------------------------------------------
+
+def fxp_int8_scale(i_bits, f_bits) -> Array:
+    """The (I,F)-derived int8 scale 2^(shift-F), computed from traced bits."""
+    total = jnp.asarray(i_bits, jnp.int32) + jnp.asarray(f_bits, jnp.int32)
+    shift = jnp.maximum(total + 1 - INT8_BITS, 0)
+    return _pow2_int(shift) / _pow2_int(jnp.asarray(f_bits, jnp.int32))
+
+
+def fxp_int8_bounds(i_bits, f_bits) -> tuple[Array, Array]:
+    """(qmin, qmax) of the int8 embedding, from traced bits (f32 scalars)."""
+    total = jnp.asarray(i_bits, jnp.int32) + jnp.asarray(f_bits, jnp.int32)
+    shift = jnp.maximum(total + 1 - INT8_BITS, 0)
+    mag = _pow2_int(total - shift)
+    return -mag, mag - 1.0
+
+
+def absmax_scale(x: Array) -> Array:
+    """Per-tensor dynamic scale absmax/127 (traced scalar, zero-safe)."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.where(m > 0, m / 127.0, jnp.float32(1.0))
+
+
+def quantize_int8(x: Array, scale, qmin=-127.0, qmax=127.0) -> Array:
+    """Round-to-nearest int8 payload on the grid ``scale * [qmin, qmax]``."""
+    xf = x.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale), qmin, qmax)
+    return q.astype(jnp.int8)
+
+
+def quantize_int8_fxp(x: Array, i_bits, f_bits) -> tuple[Array, Array]:
+    """Quantize onto the (I,F)-derived int8 grid. Returns (payload, scale).
+
+    Works with both static Python-int and traced int32 bits; the returned
+    scale is a f32 scalar either way.
+    """
+    if isinstance(i_bits, int) and isinstance(f_bits, int):
+        spec = int8_spec(i_bits, f_bits)
+        return (quantize_int8(x, spec.scale, spec.qmin, spec.qmax),
+                jnp.float32(spec.scale))
+    scale = fxp_int8_scale(i_bits, f_bits)
+    qmin, qmax = fxp_int8_bounds(i_bits, f_bits)
+    return quantize_int8(x, scale, qmin, qmax), scale
+
+
+def quantize_int8_absmax(x: Array) -> tuple[Array, Array]:
+    """Quantize with a per-tensor dynamic absmax scale (payload, scale)."""
+    scale = absmax_scale(x)
+    return quantize_int8(x, scale), scale
+
+
+def transport_bits(bits: Optional[tuple]) -> Optional[tuple]:
+    """The int8 *transport* rule for a static (I,F) format: keep the format
+    grid when it embeds exactly (bitwidth <= 8); wider formats travel with
+    absmax block scaling instead (None) — dropping their low fractional
+    bits on the wire would zero small gradients and stall SGD."""
+    if bits is None:
+        return None
+    i_bits, f_bits = bits
+    return bits if i_bits + f_bits + 1 <= INT8_BITS else None
+
+
+def quantize_int8_auto(x: Array, bits: Optional[tuple]) -> tuple[Array, Array]:
+    """Transport quantization: the (I,F) grid when it embeds exactly,
+    per-tensor absmax scaling otherwise (see ``transport_bits``)."""
+    bits = transport_bits(bits)
+    if bits is None:
+        return quantize_int8_absmax(x)
+    return quantize_int8_fxp(x, *bits)
+
+
+def dequantize_int8(q: Array, scale, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-tile storage container (the dW wire format, 2D-tiled)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockScaledInt8:
+    """A 2D array stored as int8 tiles with one f32 scale per tile."""
+
+    payload: Array      # int8, padded to a multiple of the tile
+    scales: Array       # f32 [tiles_r, tiles_c]
+    shape: tuple        # original (unpadded) shape
+    tile: tuple         # (tr, tc)
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        tr, tc = self.tile
+        pr, pc = self.payload.shape
+        s = jnp.repeat(jnp.repeat(self.scales, tr, axis=0), tc, axis=1)
+        x = self.payload.astype(jnp.float32) * s
+        return x[:self.shape[0], :self.shape[1]].astype(dtype)
+
+
+jax.tree_util.register_dataclass(
+    BlockScaledInt8, data_fields=["payload", "scales"],
+    meta_fields=["shape", "tile"])
+
+
+def quantize_int8_tiles(x: Array, i_bits: Optional[int] = None,
+                        f_bits: Optional[int] = None,
+                        tile: tuple = TILE) -> BlockScaledInt8:
+    """Tile-quantize a 2D array.
+
+    With ``(i_bits, f_bits)`` given, every tile starts from the format's
+    int8 scale and widens (per tile) only where the tile's absmax overflows
+    the format range; without bits the scale is pure per-tile absmax/127
+    (the ``compression.compress_int8`` rule applied to 2D tiles).
+    """
+    assert x.ndim == 2, x.shape
+    tr, tc = tile
+    r, c = x.shape
+    pr, pc = (-r) % tr, (-c) % tc
+    xf = jnp.pad(x.astype(jnp.float32), ((0, pr), (0, pc)))
+    nr, nc = xf.shape[0] // tr, xf.shape[1] // tc
+    tiles = xf.reshape(nr, tr, nc, tc).transpose(0, 2, 1, 3)  # [nr,nc,tr,tc]
+    absmax = jnp.max(jnp.abs(tiles), axis=(2, 3))
+    dyn = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    if i_bits is not None and f_bits is not None:
+        base = fxp_int8_scale(i_bits, f_bits)
+        scales = jnp.maximum(dyn, base)  # widen only overflowing tiles
+    else:
+        scales = dyn
+    q = jnp.clip(jnp.round(tiles / scales[:, :, None, None]), -127, 127)
+    payload = q.transpose(0, 2, 1, 3).reshape(xf.shape).astype(jnp.int8)
+    return BlockScaledInt8(payload=payload, scales=scales, shape=(r, c),
+                           tile=(tr, tc))

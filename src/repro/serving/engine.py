@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.dist.api import constrain
+from repro.kernels.ops import kernel_backend_ctx
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models import lm
@@ -143,8 +144,19 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: Array):
 # ---------------------------------------------------------------------------
 
 def prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
-            cache_dtype=jnp.bfloat16):
-    """Run the full-context forward, returning (last_logits, decode state)."""
+            cache_dtype=jnp.bfloat16, kernel_backend: Optional[str] = None):
+    """Run the full-context forward, returning (last_logits, decode state).
+
+    ``kernel_backend`` selects the dense-unit datapath for the prefill
+    matmuls ("off" | "emulate" | "int8" | None = "auto": off on CPU, int8
+    on TPU) — prefill is compute-bound, exactly where the paper's low-bit
+    MXU reuse pays; the per-token decode loop stays on the jnp path."""
+    with kernel_backend_ctx(kernel_backend or "auto"):
+        return _prefill_impl(params, cfg, batch, max_len, cache_dtype)
+
+
+def _prefill_impl(params, cfg: ModelConfig, batch: dict, max_len: int,
+                  cache_dtype=jnp.bfloat16):
     fam = cfg.family
     x, positions = lm.embed_input(params, cfg, batch)
     t = x.shape[1]
@@ -197,9 +209,11 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
 
 
 def greedy_generate(params, cfg: ModelConfig, batch: dict, max_len: int,
-                    num_steps: int, cache_dtype=jnp.bfloat16):
+                    num_steps: int, cache_dtype=jnp.bfloat16,
+                    kernel_backend: Optional[str] = None):
     """Prefill + greedy decode loop (reference serving driver)."""
-    logits, state = prefill(params, cfg, batch, max_len, cache_dtype)
+    logits, state = prefill(params, cfg, batch, max_len, cache_dtype,
+                            kernel_backend=kernel_backend)
     out = []
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     for _ in range(num_steps):

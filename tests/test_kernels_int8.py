@@ -1,0 +1,264 @@
+"""int8 MXU datapath validation: the quant.int8 format mapping, the int8
+kernels vs their jnp oracles (property sweeps across shapes, bitwidths and
+activations — including non-128-divisible shapes through the autotuner's
+ref fallback), and the fused TDM frame vs the sequential kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bp_fused_unit import bp_fused_unit
+from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.fxp_matmul import fxp_matmul
+from repro.kernels.sgd_dw_update import sgd_dw_update
+from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,
+                               sgd_dw_update_op, tune_blocks, tune_fused)
+from repro.quant.int8 import (int8_spec, quantize_int8_auto,
+                              quantize_int8_fxp, quantize_int8_tiles,
+                              transport_bits)
+from repro.quant.fixed_point import quantize
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.key(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Format mapping
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.tuples(st.integers(1, 4), st.integers(1, 10)),
+       seed=st.integers(0, 1000))
+def test_narrow_formats_embed_exactly(bits, seed):
+    """(I,F) with bitwidth <= 8: int8 payload * scale == kq(x) exactly."""
+    i, f = bits
+    if i + f + 1 > 8:
+        f = 8 - 1 - i
+    x = rand(seed, (64,), scale=4.0)
+    q, s = quantize_int8_fxp(x, i, f)
+    np.testing.assert_array_equal(
+        np.asarray(q.astype(jnp.float32) * s), np.asarray(quantize(x, i, f)))
+
+
+def test_wide_format_drops_low_bits():
+    spec = int8_spec(2, 12)  # 15-bit format -> shift 7
+    assert spec.shift == 7 and not spec.exact
+    assert spec.scale == 2.0 ** -5
+    assert (spec.qmin, spec.qmax) == (-128, 127)
+    # transport rule: wide formats travel absmax-scaled instead
+    assert transport_bits((2, 12)) is None
+    assert transport_bits((3, 4)) == (3, 4)
+    assert transport_bits(None) is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 40), c=st.integers(1, 40), seed=st.integers(0, 99))
+def test_tiled_storage_roundtrip(r, c, seed):
+    x = rand(seed, (r, c), scale=3.0)
+    t = quantize_int8_tiles(x, tile=(16, 16))
+    assert t.payload.dtype == jnp.int8
+    y = np.asarray(t.dequantize())
+    assert y.shape == (r, c)
+    # absmax per tile: error <= absmax/127/2 per element, absmax <= global
+    tol = float(jnp.max(jnp.abs(x))) / 127.0 * 0.5 + 1e-7
+    assert np.max(np.abs(y - np.asarray(x))) <= tol
+
+
+def test_tiled_storage_format_grid():
+    """With a narrow (I,F), in-range tiles sit on the exact format grid."""
+    x = jnp.asarray([[0.25, -0.5], [1.0, -1.25]], jnp.float32)
+    t = quantize_int8_tiles(x, 2, 4, tile=(2, 2))  # (2,4): step 1/16, max ~4
+    np.testing.assert_array_equal(np.asarray(t.dequantize()), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# int8 kernels vs int8 oracles (property sweeps)
+# ---------------------------------------------------------------------------
+
+ACTS = ["identity", "relu", "sigmoid", "tanh", "silu", "gelu"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mexp=st.integers(3, 5), kexp=st.integers(3, 5), nexp=st.integers(3, 5),
+    ibits=st.integers(1, 5), fbits=st.integers(2, 12),
+    seed=st.integers(0, 1000),
+)
+def test_fxp_matmul_int8_property(mexp, kexp, nexp, ibits, fbits, seed):
+    m, k, n = 2 ** mexp, 2 ** kexp, 2 ** nexp
+    act = ACTS[seed % len(ACTS)]
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n), scale=0.5)
+    bits = (ibits, fbits)
+    got = fxp_matmul_op(x, w, xa_bits=bits, w_bits=bits, out_bits=None,
+                        act=act, datapath="int8")
+    want = ref.fxp_matmul_int8_ref(x, w, xa_bits=bits, w_bits=bits,
+                                   out_bits=None, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(1, 64), din=st.integers(1, 48), dout=st.integers(1, 48),
+    seed=st.integers(0, 1000),
+)
+def test_int8_ops_any_shape(t, din, dout, seed):
+    """Arbitrary (incl. odd / non-128-divisible) shapes: wrappers must agree
+    with the oracle either through the kernel or the ref fallback."""
+    g = rand(seed, (t, dout), scale=0.5)
+    w = rand(seed + 1, (din, dout))
+    z = rand(seed + 2, (t, din), scale=2.0)
+    x = rand(seed + 3, (t, din))
+    # jit-vs-eager f32 rescale reorders can flip a .5-ulp tie of the (2,12)
+    # output grid -> tolerance of one output-resolution step
+    got = bp_gstep_op(g, w, z, datapath="int8")
+    want = ref.bp_gstep_int8_ref(g, w, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2.0 ** -12 + 1e-6, rtol=1e-5)
+    got = sgd_dw_update_op(x, g, w, 0.05, datapath="int8")
+    want = ref.sgd_dw_update_int8_ref(x, g, w, 0.05)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["relu", "tanh"])
+@pytest.mark.parametrize("t,din,dout,bm,bn,bk", [
+    (16, 24, 32, 8, 8, 16),
+    (32, 16, 16, 16, 16, 8),
+])
+def test_bp_gstep_int8_blocks(act, t, din, dout, bm, bn, bk):
+    """Direct kernel call (explicit blocks) on the int8 datapath."""
+    g = rand(7, (t, dout), scale=0.5)
+    w = rand(8, (din, dout))
+    z = rand(9, (t, din), scale=2.0)
+    qg, sg = quantize_int8_auto(g, (2, 5))
+    qw, sw = quantize_int8_auto(w, (2, 5))
+    got = bp_gstep(qg, qw, z, g_bits=None, act=act, bm=bm, bn=bn, bk=bk,
+                   datapath="int8", scale=sg * sw, interpret=True)
+    want = ref.bp_gstep_int8_ref(g, w, z, g_in_bits=(2, 5), w_bits=(2, 5),
+                                 g_bits=None, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sgd_dw_update_dw_only_mode():
+    """w=None returns the raw outer product (the custom_vjp dW form)."""
+    x = rand(13, (32, 24))
+    g = rand(14, (32, 16), scale=0.1)
+    got = sgd_dw_update(x, g, None, 0.0, bm=8, bn=8, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x.T @ g),
+                               atol=1e-5, rtol=1e-5)
+    qx, sx = quantize_int8_auto(x, None)
+    qg, sg = quantize_int8_auto(g, None)
+    got8 = sgd_dw_update(qx, qg, None, 0.0, bm=8, bn=8, bk=8,
+                         datapath="int8", scale=sx * sg, interpret=True)
+    want8 = ref.sgd_dw_update_int8_ref(x, g, None, 0.0, xa_bits=None,
+                                       g_in_bits=None)
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(want8),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bp_fused_unit: the TDM frame vs the sequential kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    texp=st.integers(3, 6), din=st.integers(2, 6), dout=st.integers(2, 6),
+    seed=st.integers(0, 1000),
+)
+def test_bp_fused_unit_matches_sequential(texp, din, dout, seed):
+    """The one-pass frame == bp_gstep + sgd_dw_update run sequentially."""
+    t, din, dout = 2 ** texp, 8 * din, 8 * dout
+    g = rand(seed, (t, dout), scale=0.3)
+    w = rand(seed + 1, (din, dout))
+    x = rand(seed + 2, (t, din))
+    z = rand(seed + 3, (t, din), scale=2.0)
+    g_bits, w_bits = (2, 12), (2, 12)
+
+    go, wn = bp_fused_unit(g, w, x, z, 0.05, g_bits=g_bits, w_bits=w_bits,
+                           bt=min(t, 16), interpret=True)
+    # sequential: Eq. 8 against q_w(W), then Eq. 9 + Eq. 1 on the master
+    from repro.kernels.common import kq
+    want_go = ref.bp_gstep_ref(g, kq(w, *w_bits), z, g_bits=g_bits,
+                               act="relu")
+    want_wn = ref.sgd_dw_update_ref(x, g, w, 0.05, w_bits=None)
+    np.testing.assert_allclose(np.asarray(go), np.asarray(want_go),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(want_wn),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["relu", "silu"])
+def test_bp_fused_unit_int8(act):
+    t, din, dout = 32, 24, 16
+    g = rand(20, (t, dout), scale=0.3)
+    w = rand(21, (din, dout))
+    x = rand(22, (t, din))
+    z = rand(23, (t, din), scale=2.0)
+    go, wn = bp_fused_unit_op(g, w, x, z, 0.05, act=act, datapath="int8")
+    want_go, want_wn = ref.bp_fused_unit_int8_ref(g, w, x, z, 0.05, act=act)
+    np.testing.assert_allclose(np.asarray(go), np.asarray(want_go),
+                               atol=2.0 ** -12 + 1e-6, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(want_wn),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_bp_fused_unit_odd_shape_falls_back():
+    """Odd token count: the op must fall back to the jnp frame, same math."""
+    t, din, dout = 17, 24, 16
+    g = rand(24, (t, dout), scale=0.3)
+    w = rand(25, (din, dout))
+    x = rand(26, (t, din))
+    z = rand(27, (t, din), scale=2.0)
+    assert tune_fused(t, din, dout) is None
+    go, wn = bp_fused_unit_op(g, w, x, z, 0.05)
+    want_go, want_wn = ref.bp_fused_unit_ref(g, w, x, z, 0.05)
+    np.testing.assert_allclose(np.asarray(go), np.asarray(want_go),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(want_wn),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+def test_tuner_rejects_untileable_dims():
+    assert tune_blocks(17, 9, 23) is None      # primes/odd: no aligned block
+    assert tune_blocks(12, 16, 16) is None     # 12 has no multiple-of-8 divisor
+    assert tune_fused(33, 48, 16) is None
+
+
+def test_tuner_prefers_mxu_alignment():
+    bm, bn, bk = tune_blocks(256, 256, 256)
+    assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+
+def test_tuner_respects_vmem_budget():
+    from repro.kernels.ops import VMEM_BUDGET_BYTES
+    bm, bn, bk = tune_blocks(4096, 4096, 4096)
+    assert (2 * (bm * bk + bk * bn) * 4 + bm * bn * 8) <= VMEM_BUDGET_BYTES
+    # full-dim blocks on small shapes (single launch, exact ref numerics)
+    assert tune_blocks(32, 16, 48) == (32, 16, 48)
+
+
+def test_tuner_is_cached():
+    a = tune_blocks(640, 384, 512)
+    b = tune_blocks(640, 384, 512)
+    assert a is b  # lru_cache identity
+
+
+def test_no_degenerate_one_wide_blocks():
+    """The old _pick degraded odd dims to 1-wide blocks; the tuner must
+    never emit a block below the 8-sublane alignment."""
+    for dims in [(24, 40, 56), (8, 8, 8), (2048, 8, 136)]:
+        blocks = tune_blocks(*dims)
+        assert blocks is not None
+        assert all(b >= 8 for b in blocks), (dims, blocks)

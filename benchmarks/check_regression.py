@@ -1,0 +1,98 @@
+"""Benchmark regression gate: compare a fresh benchmark JSON against the
+committed baseline and fail on wall-time regressions.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_kernels.json --fresh BENCH_kernels.fresh.json
+
+Designed to survive CI noise and machine drift:
+
+  * rows are matched by (suite, name); rows present on only one side are
+    reported informationally, never fatally (new benches don't need a
+    baseline in the same PR that adds them)
+  * rows whose baseline wall-time is under ``--min-us`` are skipped — the
+    timer jitter on micro-rows swamps any signal
+  * the per-row ratio is normalized by the MINIMUM ratio across all
+    comparable rows (floored at 1.0), so a uniformly slower CI machine
+    shifts the whole distribution without tripping the gate; only rows
+    that regress ``--tolerance`` beyond that shared shift fail.  The
+    minimum — not the median — is the shift estimate so a regression
+    shared by most rows (e.g. a slowdown in a helper they all call) still
+    trips on every affected row as long as ONE unaffected row anchors the
+    machine speed; only a regression uniform across ALL rows is
+    indistinguishable from a slower machine, which is the inherent limit
+    of a self-normalizing gate
+
+REPRO_BENCH_TOLERANCE overrides --tolerance (CI escape hatch).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for r in rows:
+        if not isinstance(r.get("us_per_call"), (int, float)):
+            continue
+        out[(r.get("suite", ""), r.get("name", ""))] = float(r["us_per_call"])
+    return out
+
+
+def check(baseline: dict, fresh: dict, tolerance: float,
+          min_us: float) -> list:
+    """Return [(key, base_us, fresh_us, ratio, limit)] for failing rows."""
+    comparable = {k: (baseline[k], fresh[k]) for k in baseline.keys() & fresh
+                  if baseline[k] >= min_us and fresh[k] > 0}
+    if not comparable:
+        return []
+    ratios = {k: f / b for k, (b, f) in comparable.items()}
+    shift = max(1.0, min(ratios.values()))
+    limit = shift * (1.0 + tolerance)
+    return sorted((k, comparable[k][0], comparable[k][1], r, limit)
+                  for k, r in ratios.items() if r > limit)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional wall-time regression beyond "
+                         "the shared machine-speed shift (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="skip rows whose baseline wall-time is below this "
+                         "(timer noise floor)")
+    args = ap.parse_args(argv)
+    tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", args.tolerance))
+
+    baseline = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    only_base = sorted(baseline.keys() - fresh.keys())
+    only_fresh = sorted(fresh.keys() - baseline.keys())
+    for k in only_base:
+        print(f"note: {'/'.join(k)} missing from fresh run")
+    for k in only_fresh:
+        print(f"note: {'/'.join(k)} has no committed baseline yet")
+
+    failures = check(baseline, fresh, tol, args.min_us)
+    n_cmp = len([k for k in baseline.keys() & fresh.keys()
+                 if baseline[k] >= args.min_us])
+    if failures:
+        print(f"\n{len(failures)} of {n_cmp} rows regressed beyond "
+              f"{tol:.0%} (after machine-shift normalization):")
+        for k, b, f, r, limit in failures:
+            print(f"  FAIL {'/'.join(k)}: {b:.0f}us -> {f:.0f}us "
+                  f"(x{r:.2f}, limit x{limit:.2f})")
+        return 1
+    print(f"benchmark gate OK: {n_cmp} rows within {tol:.0%} of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,

@@ -1,4 +1,5 @@
-"""Fig. 3 analogue: the fused per-layer BP pipeline vs monolithic autodiff.
+"""Fig. 3 analogue: the fused per-layer BP pipeline vs monolithic autodiff,
+plus the multi-device pipeline-schedule matrix.
 
 TaxoNN's pipeline overlaps G-propagation with weight updates; the gradient
 for layer i exists only while layer i is being processed.  Measured here:
@@ -9,6 +10,10 @@ for layer i exists only while layer i is being processed.  Measured here:
     INSIDE the backward scan body (overlappable), autodiff reduces the
     whole tree AFTER backward (counted from HLO text)
   * measured step walltime, engine vs autodiff (CPU, reduced config)
+  * per-schedule rows (gpipe / 1f1b / interleaved): fwd+grad walltime of
+    ``dist.pipeline.pipeline_apply`` plus the schedule's modeled bubble
+    fraction, tick count, and peak-activation microbatches — written to
+    BENCH_pipeline.json in CI and gated by benchmarks/check_regression.py
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import numpy as np
 
 from repro.core import QuantPolicy, make_train_step
 from repro.core.steps import default_bits, init_train_state
+from repro.dist.pipeline import get_schedule, pipeline_apply
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import Hyper, OptimizerConfig
@@ -74,6 +80,55 @@ def run(quick: bool = False):
             "name": f"pipeline/step_walltime_{engine}",
             "us_per_call": us,
             "loss": float(m["loss"]),
+        })
+
+    # --- pipeline schedules: measured walltime + modeled bubble/memory ----
+    S, M, MB, D = 4, 8 if quick else 16, 4, 64
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (S, D, D)) * D ** -0.5
+    xs = jax.random.normal(jax.random.key(1), (M, MB, D))
+
+    def stage_body(stage_w, h):
+        return jnp.tanh(h @ stage_w)
+
+    sched_reps = 3 if quick else 10
+    # gpipe and 1f1b share identity stage placement, so their executed
+    # program is IDENTICAL (the schedules differ in the tick-table cost
+    # model, not the computed function) — time that program once and reuse
+    # the measurement, rather than committing timer noise as a phantom
+    # schedule speedup for the regression gate to chase.  interleaved's
+    # storage permutation changes the HLO and gets its own timing.
+    us_by_placement = {}
+    for label, spec, virt in (("gpipe", "gpipe", None),
+                              ("1f1b", "1f1b", None),
+                              ("interleaved_v2", "interleaved", 2)):
+        sched = get_schedule(spec, num_virtual=virt)
+        placement = tuple(sched.stage_of_slot(S))
+        if placement not in us_by_placement:
+            def loss(w_, sched=sched):
+                return jnp.sum(
+                    pipeline_apply(w_, xs, stage_body, schedule=sched) ** 2)
+
+            gfn = jax.jit(jax.grad(loss))
+            g = gfn(w)
+            jax.block_until_ready(g)
+            t0 = time.time()
+            for _ in range(sched_reps):
+                g = gfn(w)
+            jax.block_until_ready(g)
+            us_by_placement[placement] = (time.time() - t0) / sched_reps * 1e6
+        plan = sched.plan(S, M)
+        rows.append({
+            "name": f"pipeline/schedule_{label}",
+            "us_per_call": us_by_placement[placement],
+            "bubble_fraction": plan.bubble,
+            "ticks": plan.num_ticks,
+            "peak_activation_microbatches": plan.peak_activation_microbatches,
+            "num_devices": plan.num_devices,
+            "num_stages": S,
+            "num_microbatches": M,
+            "note": "walltime shared across identity-placement schedules; "
+                    "bubble/ticks/peak are the modeled schedule columns",
         })
 
     # --- update placement: inside-scan vs post-hoc ------------------------

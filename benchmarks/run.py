@@ -5,8 +5,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived = key=value pairs) and,
 with ``--json``, persists the rows as a JSON list (default path
-``BENCH_kernels.json``) so the perf trajectory is tracked across PRs (CI
-uploads it as an artifact).
+``BENCH_kernels.json``) so the perf trajectory is tracked across PRs.  CI
+runs the kernels and pipeline suites into fresh JSONs, gates them against
+the committed ``BENCH_kernels.json`` / ``BENCH_pipeline.json`` baselines
+via ``benchmarks/check_regression.py``, and uploads both as artifacts.
 
   convergence — Fig. 5 / Table I   (per-layer (I,F) vs fp32 accuracy)
   overhead    — Tables II/III     (train-support cost over inference)

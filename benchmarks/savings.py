@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config
+from repro.configs import get_config
 from repro.quant.compression import compress_int8, quantized_allreduce_bytes
 from repro.serving import init_decode_state
 

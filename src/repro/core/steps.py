@@ -14,12 +14,10 @@ and "enc_blocks" for encdec).  One compiled step serves every schedule.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.taxonn import (
     QuantPolicy,
@@ -167,18 +165,55 @@ def _bits_edge(bits, idx):
 # The TaxoNN train step
 # ---------------------------------------------------------------------------
 
+def _pipeline_metrics(pipeline_schedule, pipeline_stages, num_microbatches):
+    """Resolve the pipeline knob into (Schedule | None, static metric dict).
+
+    The schedule is validated eagerly (unknown names and uneven
+    virtual-stage counts fail at step-build time, not mid-training) and its
+    tick-table estimates are folded into every step's metrics so the
+    bubble/memory tradeoff is visible in training logs.
+    """
+    if pipeline_schedule is None:
+        return None, {}
+    from repro.dist.pipeline import get_schedule
+    sched = get_schedule(pipeline_schedule)
+    S = int(pipeline_stages) if pipeline_stages else 1
+    M = int(num_microbatches) if num_microbatches else 1
+    sched.validate(S, M)
+    plan = sched.plan(S, M)
+    return sched, {
+        "pipe_bubble": jnp.float32(plan.bubble),
+        "pipe_ticks": jnp.int32(plan.num_ticks),
+        "pipe_peak_mb": jnp.int32(plan.peak_activation_microbatches),
+    }
+
+
 def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                     optim_cfg: Optional[OptimizerConfig] = None,
                     engine: str = "taxonn",
-                    kernel_backend: Optional[str] = None):
+                    kernel_backend: Optional[str] = None,
+                    pipeline_schedule=None,
+                    pipeline_stages: Optional[int] = None,
+                    num_microbatches: Optional[int] = None):
     """``kernel_backend`` overrides ``policy.kernel_backend`` ("off" |
     "emulate" | "int8" | "auto"; auto = off on CPU, int8 on TPU) and selects
-    the datapath for the dense-unit matmuls in the step's hot loops."""
+    the datapath for the dense-unit matmuls in the step's hot loops.
+
+    ``pipeline_schedule`` ("gpipe" | "1f1b" | "interleaved" or a
+    ``repro.dist.pipeline.Schedule``) declares the pipeline schedule this
+    step runs under when the mesh has a "pipe" axis of ``pipeline_stages``
+    devices and the batch is split into ``num_microbatches`` microbatches.
+    It is validated at build time and surfaces the schedule's tick-table
+    estimates (``pipe_bubble`` / ``pipe_ticks`` / ``pipe_peak_mb``) in the
+    step metrics; the returned step exposes it as ``step.pipeline_schedule``.
+    """
     policy = policy or QuantPolicy.off()
     optim_cfg = optim_cfg or OptimizerConfig()
     backend = resolve_backend(
         kernel_backend if kernel_backend is not None
         else getattr(policy, "kernel_backend", "auto"))
+    sched, pipe_metrics = _pipeline_metrics(
+        pipeline_schedule, pipeline_stages, num_microbatches)
 
     if engine == "autodiff":
         def auto_step(params, opt_state, batch, hyper: Hyper, bits=None):
@@ -192,7 +227,9 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                 new_params[k], new_opt[k] = apply_update(
                     params[k], grads[k], opt_state[k], hyper, optim_cfg)
             metrics["grad_norm"] = jnp.sqrt(gsq)
+            metrics.update(pipe_metrics)
             return new_params, new_opt, metrics
+        auto_step.pipeline_schedule = sched
         return auto_step
 
     if engine != "taxonn":
@@ -321,6 +358,7 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         new_opt.update(bnd_opt_new)
 
         metrics["grad_norm"] = jnp.sqrt(gsq)
+        metrics.update(pipe_metrics)
         return new_params, new_opt, metrics
 
     def step(params, opt_state, batch, hyper: Hyper, bits: dict,
@@ -328,6 +366,7 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         with kernel_backend_ctx(backend):  # active at trace time
             return _step_impl(params, opt_state, batch, hyper, bits, rng)
 
+    step.pipeline_schedule = sched
     return step
 
 

@@ -29,7 +29,6 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.dist.collectives import compressed_psum
 from repro.optim import OptimizerConfig, Hyper, apply_update

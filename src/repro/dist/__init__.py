@@ -6,7 +6,9 @@ against:
   api          activation-sharding rules, perf options, ``constrain``
   sharding     parameter / optimizer / batch / decode-state PartitionSpecs
   collectives  dense + int8-compressed tree all-reduce (gradient psum)
-  pipeline     GPipe-style microbatch pipeline (exact, differentiable)
-  hlo_analysis compiled-artifact FLOPs/bytes/collective extraction + roofline
+  pipeline     pipeline-schedule subsystem: GPipe / 1F1B / interleaved-1F1B
+               tick tables + the exact differentiable microbatch pipeline
+  hlo_analysis compiled-artifact FLOPs/bytes/collective extraction (async
+               pair-aware, replica-group byte attribution) + roofline
 """
 from repro.util import jaxcompat as _jaxcompat  # noqa: F401  (installs shims)

@@ -3,10 +3,20 @@ and the three-term roofline.
 
 ``analyze_compiled`` reads XLA's per-device cost/memory analyses off a
 ``jax.stages.Compiled`` and parses the optimized HLO for collective ops
-(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute),
-summing each op's result bytes as the per-device moved-byte estimate —
-the data-movement accounting NeuroTrainer (Kim et al., 2017) argues
-dominates training energy.
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute)
+— the data-movement accounting NeuroTrainer (Kim et al., 2017) argues
+dominates training energy.  Async collectives are handled as start/done
+PAIRS (the ``-done`` op contributes nothing; each pair is one collective)
+and per-op bytes are attributed by REPLICA-GROUP SIZE, not result shape:
+a ring all-reduce over a group of g devices moves 2(g-1)/g payload bytes
+per device, an all-gather / reduce-scatter / all-to-all (g-1)/g, and a
+collective-permute one payload per hop.
+
+``per_tick_attribution`` divides a module's collective bytes across the
+tick count of a pipeline schedule's plan (``dist.pipeline``), so the
+bubble/traffic tradeoff of GPipe vs 1F1B vs interleaved is a measured
+quantity: fewer ticks under the same permute traffic means more bytes in
+flight per tick of schedule time.
 
 ``roofline_terms`` converts (flops, hbm bytes, collective bytes) into
 per-step seconds under a fixed accelerator model and names the dominant
@@ -37,10 +47,16 @@ COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
 # one HLO array type, e.g. f32[4,8]{1,0} or pred[] — captures dtype + dims
 _ARRAY_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)"
                        r"\[([0-9,]*)\]")
-_COLLECTIVE_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(", re.M)
+_COLLECTIVE_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all"
+    r"|collective-permute)"
+    r"(?P<suffix>-start|-done)?\((?P<args>[^\n]*)", re.M)
+_OPERAND_REF_RE = re.compile(r"%([\w.\-]+)")
+# explicit groups: replica_groups={{0,1},{2,3}} -> first group's size
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+# iota (v2) groups: replica_groups=[4,2]<=[8] -> [num_groups, group_size]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
 
 
 def _shape_bytes(typestr: str) -> int:
@@ -56,14 +72,108 @@ def _shape_bytes(typestr: str) -> int:
     return total
 
 
-def collective_stats(hlo_text: str) -> Dict:
-    """Count collectives and sum their result bytes in optimized HLO."""
+def _payload_bytes(line: str) -> int:
+    """Largest single array on the op line.
+
+    The payload of a collective is ONE logical array — the gathered result
+    for all-gather, the (larger) operand for reduce-scatter, either side
+    for all-reduce / collective-permute — so the max over every array
+    type printed on the line (operands, tuple results, layouts) picks it
+    without double-counting the aliased halves of a ``-start`` tuple.
+    """
+    best = 0
+    for dtype, dims in _ARRAY_RE.findall(line):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dtype])
+    return best
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    """Per-device bytes moved as a multiple of the payload, for a ring
+    collective over a replica group of g devices."""
+    if kind == "collective-permute":
+        return 1.0          # one hop: each device sends its payload once
+    if g <= 1:
+        return 0.0          # a group of one moves nothing
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g      # reduce-scatter + all-gather phases
+    return (g - 1) / g                # all-gather / reduce-scatter / a2a
+
+
+def collective_stats(hlo_text: str, default_group_size: int = 2) -> Dict:
+    """Collective census of one optimized HLO module.
+
+    Async ``-start``/``-done`` ops are paired by SSA name (the done op
+    references the start's result) and counted once; bytes are attributed
+    per replica-group size via ``_wire_factor``.  Ops whose replica groups
+    are not printed (or are empty) fall back to ``default_group_size`` —
+    the g=2 default reproduces the old result-shape estimate for
+    all-reduce (factor 1.0) while staying finite for the others.
+    """
     counts: Dict[str, int] = {}
-    moved = 0
-    for typestr, kind in _COLLECTIVE_RE.findall(hlo_text):
+    by_kind_bytes: Dict[str, float] = {}
+    moved = 0.0
+    starts: Dict[str, str] = {}        # ssa name -> kind, awaiting a done
+    async_pairs = 0
+    for m in _COLLECTIVE_OP_RE.finditer(hlo_text):
+        kind, suffix = m.group("kind"), m.group("suffix")
+        line = m.group(0)
+        if suffix == "-done":
+            ref = _OPERAND_REF_RE.search(m.group("args"))
+            if ref and starts.pop(ref.group(1), None) is not None:
+                async_pairs += 1
+            continue                   # bytes were counted at the start op
+        if suffix == "-start":
+            starts[m.group("name")] = kind
         counts[kind] = counts.get(kind, 0) + 1
-        moved += _shape_bytes(typestr)
-    return {"counts": counts, "moved_bytes_per_device": float(moved)}
+        g = _group_size(line, default_group_size)
+        op_bytes = _wire_factor(kind, g) * _payload_bytes(line)
+        by_kind_bytes[kind] = by_kind_bytes.get(kind, 0.0) + op_bytes
+        moved += op_bytes
+    return {
+        "counts": counts,
+        "moved_bytes_per_device": float(moved),
+        "by_kind_bytes": by_kind_bytes,
+        "async_pairs": async_pairs,
+        "unmatched_starts": len(starts),
+    }
+
+
+def per_tick_attribution(hlo_text: str, num_ticks: int,
+                         default_group_size: int = 2) -> Dict:
+    """Attribute a module's collective bytes to pipeline-schedule ticks.
+
+    ``num_ticks`` comes from a ``dist.pipeline`` SchedulePlan (the
+    schedule's modeled span); the result says how many collective — and
+    specifically collective-permute, the stage-boundary traffic — bytes
+    each tick of schedule time must carry.
+    """
+    if num_ticks < 1:
+        raise ValueError(f"num_ticks must be >= 1, got {num_ticks}")
+    stats = collective_stats(hlo_text, default_group_size)
+    per_kind = {k: v / num_ticks for k, v in stats["by_kind_bytes"].items()}
+    return {
+        "num_ticks": int(num_ticks),
+        "moved_bytes_per_tick": stats["moved_bytes_per_device"] / num_ticks,
+        "bytes_per_tick_by_kind": per_kind,
+        "permute_bytes_per_tick": per_kind.get("collective-permute", 0.0),
+        "collectives": stats,
+    }
 
 
 def _cost_dict(compiled) -> Dict:

@@ -21,7 +21,6 @@ map (no materialised transpose).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

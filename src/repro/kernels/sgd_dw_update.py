@@ -23,7 +23,6 @@ Grid (Din/bm, Dout/bn, T/bk): the contraction is over tokens.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -41,7 +41,7 @@ from repro.dist.sharding import (
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models.config import ModelConfig
 from repro.optim import Hyper, OptimizerConfig
-from repro.serving import decode_step, prefill, init_decode_state
+from repro.serving import decode_step, prefill
 from repro.util.scan import unrolled_scans_ctx
 
 

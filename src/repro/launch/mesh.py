@@ -3,6 +3,11 @@
 Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — the dry-run must set
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+
+Axes: "pod" and "data" are batch/data-parallel (gradient reduction spans
+both); "model" is the tensor/expert-parallel axis; "pipe" is the pipeline
+axis the ``repro.dist.pipeline`` schedules place their stages on (one
+stage — or ``num_virtual`` round-robin virtual stages — per pipe device).
 """
 from __future__ import annotations
 
@@ -10,25 +15,46 @@ import jax
 from jax.sharding import AxisType
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def _check_pipe(pipe: int, chips: int, per_pipe_model: int) -> int:
+    if pipe < 1:
+        raise ValueError(f"pipe axis size must be >= 1, got {pipe}")
+    if chips % (pipe * per_pipe_model):
+        raise ValueError(
+            f"pipe={pipe} does not divide the pod: need pipe * {per_pipe_model}"
+            f" to divide {chips} chips")
+    return chips // (pipe * per_pipe_model)
+
+
+def make_production_mesh(*, multi_pod: bool = False, pipe: int = 1):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
 
-    Axes: "pod" and "data" are batch/data-parallel (gradient reduction spans
-    both); "model" is the tensor/expert-parallel axis.
+    With ``pipe > 1`` the data axis cedes devices to a leading "pipe"
+    dimension (stages replicate nothing, so the product of axis sizes must
+    still equal the pod): ("pipe", "data", "model") single-pod or
+    ("pod", "pipe", "data", "model") two-pod.
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipe == 1:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    else:
+        n_data = _check_pipe(pipe, 256, 16)
+        shape = (2, pipe, n_data, 16) if multi_pod else (pipe, n_data, 16)
+        axes = (("pod", "pipe", "data", "model") if multi_pod
+                else ("pipe", "data", "model"))
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0,
+                    pipe: int = 0):
     """Small mesh for in-process tests (device count permitting)."""
+    shape, axes = (n_data, n_model), ("data", "model")
+    if pipe:
+        shape, axes = (pipe,) + shape, ("pipe",) + axes
     if pod:
-        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        shape, axes = (pod,) + shape, ("pod",) + axes
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def batch_axes(mesh) -> tuple:
@@ -37,3 +63,10 @@ def batch_axes(mesh) -> tuple:
 
 def model_axis_size(mesh) -> int:
     return mesh.shape.get("model", 1)
+
+
+def pipe_axis_size(mesh) -> int:
+    """Number of pipeline-stage devices (1 when the mesh has no pipe axis)."""
+    if mesh is None:
+        return 1
+    return dict(mesh.shape).get("pipe", 1)

@@ -32,7 +32,8 @@ def render_dryrun_table(recs) -> str:
         "| arch | cell | mesh | status | compile | args/dev | temp/dev | collectives (scanned artifact) |",
         "|---|---|---|---|---|---|---|---|",
     ]
-    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]), r["mesh"])
+    def key(r):
+        return (r["arch"], CELL_ORDER.index(r["cell"]), r["mesh"])
     for r in sorted(recs, key=key):
         if r["status"] == "skipped":
             lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
@@ -58,7 +59,8 @@ def render_roofline_table(recs) -> str:
         "| arch | cell | compute | memory | collective | dominant | bound | MODEL_FLOPs/HLO | note |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
-    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]))
+    def key(r):
+        return (r["arch"], CELL_ORDER.index(r["cell"]))
     for r in sorted([r for r in recs if r["mesh"] == "pod_16x16"], key=key):
         if r["status"] != "ok":
             lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | — | — | — | "

@@ -27,8 +27,9 @@ from repro.core import QuantPolicy, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.data import SyntheticLMDataset, StragglerTolerantLoader
 from repro.dist.api import activation_sharding_ctx, make_default_rules
-from repro.dist.sharding import batch_pspecs, param_pspecs, to_named
-from repro.launch.mesh import batch_axes, make_debug_mesh
+from repro.dist.pipeline import get_schedule
+from repro.dist.sharding import param_pspecs, to_named
+from repro.launch.mesh import batch_axes, make_debug_mesh, pipe_axis_size
 from repro.models import lm
 from repro.optim import Hyper, OptimizerConfig, cosine_schedule
 
@@ -91,6 +92,19 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=0,
                     help="data-axis size (0 = all devices)")
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pipe", type=int, default=0,
+                    help="pipe-axis size (0 = no pipe axis in the mesh)")
+    ap.add_argument("--pipeline-schedule", default="none",
+                    choices=["none", "gpipe", "1f1b", "interleaved"],
+                    help="declare the pipe-axis pipeline schedule (validated"
+                         " + reported in metrics; the stack itself still "
+                         "executes data-parallel — see repro.dist.pipeline "
+                         "and the ROADMAP execution-wiring item)")
+    ap.add_argument("--virtual-stages", type=int, default=2,
+                    help="virtual stages per pipe device (interleaved "
+                         "schedule only)")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="microbatches per step for the pipeline schedule")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--deadline-s", type=float, default=5.0)
     args = ap.parse_args(argv)
@@ -100,11 +114,22 @@ def main(argv=None):
         cfg = _reduce(cfg)
 
     n_dev = len(jax.devices())
-    n_data = args.data or max(1, n_dev // args.model)
-    mesh = make_debug_mesh(n_data, args.model)
+    n_data = args.data or max(1, n_dev // (args.model * max(args.pipe, 1)))
+    mesh = make_debug_mesh(n_data, args.model, pipe=args.pipe)
     rules = make_default_rules(batch_axes(mesh))
     print(f"[train] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
           f"params~{cfg.param_count()/1e6:.1f}M", flush=True)
+
+    pipe_sched = None
+    if args.pipeline_schedule != "none":
+        pipe_sched = get_schedule(
+            args.pipeline_schedule,
+            num_virtual=(args.virtual_stages
+                         if args.pipeline_schedule == "interleaved" else None))
+        n_stages = pipe_axis_size(mesh) * pipe_sched.num_virtual
+        print(f"[train] pipeline {pipe_sched.name} (cost model only; stack "
+              f"execution stays data-parallel): "
+              f"{pipe_sched.summary(n_stages, args.microbatches)}", flush=True)
 
     ocfg = OptimizerConfig(kind=args.optimizer, grad_clip=1.0)
     policy = (QuantPolicy(grad_scale=64.0) if args.quantize
@@ -131,8 +156,14 @@ def main(argv=None):
     loader = StragglerTolerantLoader(
         lambda s: ds.batch_at(s), deadline_s=args.deadline_s)
 
-    step_fn = jax.jit(make_train_step(cfg, policy, ocfg, engine=args.engine),
-                      donate_argnums=(0, 1))
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, policy, ocfg, engine=args.engine,
+            pipeline_schedule=pipe_sched,
+            pipeline_stages=(pipe_axis_size(mesh) * pipe_sched.num_virtual
+                             if pipe_sched else None),
+            num_microbatches=args.microbatches if pipe_sched else None),
+        donate_argnums=(0, 1))
 
     losses = []
     t0 = time.time()

@@ -267,7 +267,7 @@ def _sdpa_chunked(q, k, v, causal, window, scale) -> Array:
     qpos = jnp.arange(t)[:, None]
 
     def body(carry, xs):
-        acc, m, l = carry  # acc [b,t,h,hd] f32, m/l [b,h,t] f32
+        acc, m, lse = carry  # acc [b,t,h,hd] f32, m/lse [b,h,t] f32
         kblk, vblk, blk_idx = xs
         kpos = blk_idx * blk + jnp.arange(blk)[None, :]
         ok = jnp.ones((t, blk), bool)
@@ -283,7 +283,7 @@ def _sdpa_chunked(q, k, v, causal, window, scale) -> Array:
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lse * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vblk,
                         preferred_element_type=jnp.float32)
         acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
@@ -292,9 +292,9 @@ def _sdpa_chunked(q, k, v, causal, window, scale) -> Array:
     acc0 = jnp.zeros((b, t, h, dv), jnp.float32)
     m0 = jnp.full((b, h, t), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, t), jnp.float32)
-    (acc, m, l), _ = xscan(
+    (acc, m, lse), _ = xscan(
         body, (acc0, m0, l0), (kb, vb, jnp.arange(nblk)))
-    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    out = acc / jnp.maximum(lse, 1e-30).transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)
 
 

@@ -14,17 +14,14 @@ Families:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.dist.api import constrain
 from repro.models import blocks as B
 from repro.models import layers as L
-from repro.models import ssm as S
 from repro.models.config import ModelConfig
 from repro.util.scan import xscan
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.models.config import ModelConfig
 from repro.util.scan import xscan

@@ -16,7 +16,6 @@ Kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -110,7 +109,8 @@ def apply_update(params, grads, state, hyper: Hyper, cfg: OptimizerConfig):
                               -127, 127).astype(jnp.int8)
             return (w - lr * m_new).astype(w.dtype), mq_new, s_new
         out = jax.tree.map(upd, params, grads, state["m_q"], state["m_s"])
-        istuple = lambda x: isinstance(x, tuple)
+        def istuple(x):
+            return isinstance(x, tuple)
         return (
             jax.tree.map(lambda o: o[0], out, is_leaf=istuple),
             {
@@ -132,7 +132,8 @@ def apply_update(params, grads, state, hyper: Hyper, cfg: OptimizerConfig):
             vh = v_new / (1 - cfg.beta2 ** t)
             return (w - lr * mh / (jnp.sqrt(vh) + cfg.eps)).astype(w.dtype), m_new, v_new
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        istuple = lambda x: isinstance(x, tuple)
+        def istuple(x):
+            return isinstance(x, tuple)
         return (
             jax.tree.map(lambda o: o[0], out, is_leaf=istuple),
             {

@@ -22,7 +22,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.dist.api import constrain
 from repro.kernels.ops import kernel_backend_ctx

@@ -16,7 +16,6 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

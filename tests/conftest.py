@@ -4,9 +4,16 @@ before any test module imports mesh machinery.
 Subprocess tests (test_perf_options / test_pipeline_parallel / the train
 driver) get the same treatment via ``src/sitecustomize.py`` — they export
 PYTHONPATH=src themselves, which auto-imports it at interpreter start-up.
+
+The CI matrix selects a kernel datapath per leg via REPRO_KERNEL_BACKEND
+(off | int8); tests read it through the ``kernel_backend`` fixture below so
+the no-kernel and int8 paths are both exercised on every push.
 """
+import os
 import pathlib
 import sys
+
+import pytest
 
 SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 if SRC not in sys.path:
@@ -20,3 +27,15 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "_vendor"))
+
+
+@pytest.fixture(scope="session")
+def kernel_backend() -> str:
+    """The kernel datapath selected by the CI matrix leg (default "off").
+
+    Tests that exercise the train/serve hot paths parameterize on this so
+    the {1, 4}-device x {off, int8} matrix covers every combination.
+    """
+    backend = os.environ.get("REPRO_KERNEL_BACKEND", "off")
+    assert backend in ("off", "emulate", "int8"), backend
+    return backend

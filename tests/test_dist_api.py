@@ -5,9 +5,7 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.dist.api import (activation_sharding_ctx, constrain,
                             make_default_rules, model_axis_size_ctx,

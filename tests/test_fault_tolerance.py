@@ -1,10 +1,5 @@
 """Fault-tolerance substrate: checkpoint atomicity, resume, elastic reshard,
 deterministic data pipeline, straggler mitigation, compressed collectives."""
-import json
-import os
-import pathlib
-import subprocess
-import sys
 import time
 
 import jax

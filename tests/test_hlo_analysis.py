@@ -1,0 +1,163 @@
+"""hlo_analysis: async start/done pairing, replica-group byte attribution,
+and per-tick attribution against a 1F1B-compiled pipeline module."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.hlo_analysis import (collective_stats, per_tick_attribution,
+                                     roofline_terms)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 4, timeout=600):
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT/'src'}:{ROOT/'tests'}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# text-level parsing (handcrafted HLO)
+# ---------------------------------------------------------------------------
+
+SYNC_HLO = """
+ENTRY %main {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(f32[128,64]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[512,64]{1,0} all-gather(f32[128,64]{1,0} %ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[128,64]{1,0} collective-permute(f32[128,64]{1,0} %p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %t = (f32[128,64]{1,0}) tuple(%cp)
+}
+"""
+
+
+def test_sync_collectives_group_attribution():
+    stats = collective_stats(SYNC_HLO)
+    assert stats["counts"] == {"all-reduce": 1, "all-gather": 1,
+                               "collective-permute": 1}
+    payload = 128 * 64 * 4
+    gathered = 512 * 64 * 4
+    # ring factors over a group of 4: all-reduce 2*(3/4), all-gather 3/4
+    assert stats["by_kind_bytes"]["all-reduce"] == pytest.approx(
+        1.5 * payload)
+    assert stats["by_kind_bytes"]["all-gather"] == pytest.approx(
+        0.75 * gathered)
+    assert stats["by_kind_bytes"]["collective-permute"] == pytest.approx(
+        payload)
+    assert stats["moved_bytes_per_device"] == pytest.approx(
+        1.5 * payload + 0.75 * gathered + payload)
+    assert stats["async_pairs"] == 0 and stats["unmatched_starts"] == 0
+
+
+ASYNC_HLO = """
+ENTRY %main {
+  %p0 = bf16[256,128]{1,0} parameter(0)
+  %ars = (bf16[256,128]{1,0}, bf16[256,128]{1,0}) all-reduce-start(bf16[256,128]{1,0} %p0), replica_groups=[2,2]<=[4], to_apply=%add
+  %mul = bf16[256,128]{1,0} multiply(bf16[256,128]{1,0} %p0, bf16[256,128]{1,0} %p0)
+  %ard = bf16[256,128]{1,0} all-reduce-done((bf16[256,128]{1,0}, bf16[256,128]{1,0}) %ars)
+  %cps = (bf16[256,128]{1,0}, bf16[256,128]{1,0}) collective-permute-start(bf16[256,128]{1,0} %mul), source_target_pairs={{0,1},{1,0}}
+  %cpd = bf16[256,128]{1,0} collective-permute-done((bf16[256,128]{1,0}, bf16[256,128]{1,0}) %cps)
+  %orphan = (bf16[8]{0}, bf16[8]{0}) all-gather-start(bf16[8]{0} %p0), replica_groups={{0,1}}, dimensions={0}
+  ROOT %t = (bf16[256,128]{1,0}) tuple(%cpd)
+}
+"""
+
+
+def test_async_pairs_counted_once():
+    stats = collective_stats(ASYNC_HLO)
+    # one all-reduce pair + one permute pair + one orphaned all-gather start
+    assert stats["counts"] == {"all-reduce": 1, "collective-permute": 1,
+                               "all-gather": 1}
+    assert stats["async_pairs"] == 2
+    assert stats["unmatched_starts"] == 1
+    payload = 256 * 128 * 2
+    # iota groups [2,2]<=[4] -> group size 2 -> all-reduce factor 2*(1/2)
+    assert stats["by_kind_bytes"]["all-reduce"] == pytest.approx(payload)
+    # the -done op must not double-count bytes
+    assert stats["by_kind_bytes"]["collective-permute"] == pytest.approx(
+        payload)
+
+
+def test_group_of_one_moves_nothing():
+    hlo = ("  %ar = f32[64]{0} all-reduce(f32[64]{0} %p), "
+           "replica_groups={{0}}, to_apply=%add")
+    stats = collective_stats(hlo)
+    assert stats["counts"] == {"all-reduce": 1}
+    assert stats["moved_bytes_per_device"] == 0.0
+
+
+def test_default_group_size_fallback():
+    hlo = "  %ar = f32[64]{0} all-reduce(f32[64]{0} %p), to_apply=%add"
+    # g=2 default: all-reduce factor 2*(1/2) = 1 -> the old result-bytes
+    assert collective_stats(hlo)["moved_bytes_per_device"] == 64 * 4
+    # explicit override
+    assert collective_stats(hlo, default_group_size=4)[
+        "moved_bytes_per_device"] == pytest.approx(1.5 * 64 * 4)
+
+
+def test_per_tick_attribution_text():
+    out = per_tick_attribution(SYNC_HLO, num_ticks=8)
+    payload = 128 * 64 * 4
+    assert out["num_ticks"] == 8
+    assert out["permute_bytes_per_tick"] == pytest.approx(payload / 8)
+    assert out["moved_bytes_per_tick"] == pytest.approx(
+        out["collectives"]["moved_bytes_per_device"] / 8)
+    with pytest.raises(ValueError):
+        per_tick_attribution(SYNC_HLO, num_ticks=0)
+
+
+def test_roofline_terms_dominant():
+    t = roofline_terms(197e12, 819e9, 0.0)
+    assert t["dominant"] in ("compute", "memory")
+    assert t["step_s_lower_bound"] == pytest.approx(1.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# a 1F1B-compiled module: permute bytes per schedule tick
+# ---------------------------------------------------------------------------
+
+def test_per_tick_attribution_on_1f1b_compiled_module():
+    out = run_py("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import AxisType
+    from repro.dist.hlo_analysis import collective_stats, per_tick_attribution
+    from repro.dist.pipeline import get_schedule, pipeline_apply
+
+    S, M, MB, D = 4, 8, 2, 16
+    mesh = jax.make_mesh((S,), ("pipe",), axis_types=(AxisType.Auto,))
+    sched = get_schedule("1f1b")
+    w = jax.random.normal(jax.random.key(0), (S, D, D)) * D ** -0.5
+    x = jax.random.normal(jax.random.key(1), (M, MB, D))
+
+    def body(stage_w, h):
+        return jnp.tanh(h @ stage_w)
+
+    def loss(w_):
+        return jnp.sum(pipeline_apply(w_, x, body, mesh, schedule=sched) ** 2)
+
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(jax.grad(loss)).lower(w).compile()
+    hlo = compiled.as_text()
+    stats = collective_stats(hlo)
+    assert stats["unmatched_starts"] == 0, stats
+    ticks = sched.plan(S, M).num_ticks
+    out = per_tick_attribution(hlo, ticks)
+    assert out["num_ticks"] == ticks
+    assert out["moved_bytes_per_tick"] >= 0.0
+    n_perm = stats["counts"].get("collective-permute", 0)
+    print("PERMUTES", n_perm, "PAIRS", stats["async_pairs"],
+          "PER_TICK", out["permute_bytes_per_tick"])
+    if n_perm:
+        assert out["permute_bytes_per_tick"] > 0.0
+    print("HLO_OK")
+    """)
+    assert "HLO_OK" in out

@@ -263,6 +263,19 @@ def test_compress_dw_flag_roundtrips_updates():
     assert 0.0 < diff < 1e-2, diff
 
 
+def test_matrix_leg_backend_trains(kernel_backend):
+    """The CI-matrix leg's datapath (REPRO_KERNEL_BACKEND via the conftest
+    fixture) must run the train + serve hot paths end-to-end, so the
+    no-kernel and int8 paths can't silently rot on any leg."""
+    cfg = tiny("dense")
+    p, m = _run_step(cfg, kernel_backend, steps=1)
+    assert np.isfinite(float(m["loss"])), kernel_backend
+    logits, _ = E.prefill(lm.init_params(jax.random.key(0), cfg), cfg,
+                          make_batch(cfg, t=16), max_len=32,
+                          kernel_backend=kernel_backend)
+    assert bool(jnp.all(jnp.isfinite(logits))), kernel_backend
+
+
 def test_resolve_backend_auto_off_on_cpu():
     assert resolve_backend("auto") == "off"  # this suite runs on CPU
     assert resolve_backend(None) == "off"

@@ -11,7 +11,6 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ref
 from repro.kernels.bp_fused_unit import bp_fused_unit
 from repro.kernels.bp_gstep import bp_gstep
-from repro.kernels.fxp_matmul import fxp_matmul
 from repro.kernels.sgd_dw_update import sgd_dw_update
 from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,
                                sgd_dw_update_op, tune_blocks, tune_fused)

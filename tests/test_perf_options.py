@@ -12,7 +12,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 

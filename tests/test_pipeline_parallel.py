@@ -1,9 +1,19 @@
-"""GPipe pipeline parallelism: schedule correctness + differentiability."""
+"""Pipeline-schedule subsystem: schedule correctness, differentiability,
+tick-table cost model, and edge cases (see repro.dist.pipeline)."""
 import os
 import pathlib
 import subprocess
 import sys
 import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.pipeline import (GPipeSchedule, Interleaved1F1BSchedule,
+                                 OneFOneBSchedule, bubble_fraction,
+                                 get_schedule, pipeline_apply)
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -19,11 +29,183 @@ def run_py(code: str, devices: int = 4, timeout=600):
     return out.stdout
 
 
+# ---------------------------------------------------------------------------
+# execution: every schedule == the sequential reference, values AND grads
+# ---------------------------------------------------------------------------
+
+def _body(stage_w, h):
+    for i in range(stage_w.shape[0]):
+        h = jnp.tanh(h @ stage_w[i])
+    return h
+
+
+def _seq(w, x):
+    h = x
+    for s in range(w.shape[0]):
+        h = jax.vmap(lambda mb: _body(w[s], mb))(h)
+    return h
+
+
+def _data(S, M, LPS=2, MB=2, D=8):
+    w = jax.random.normal(jax.random.key(0), (S, LPS, D, D)) * D ** -0.5
+    x = jax.random.normal(jax.random.key(1), (M, MB, D))
+    return w, x
+
+
+@pytest.mark.parametrize("sched,S,M", [
+    ("gpipe", 4, 8), ("1f1b", 4, 8), ("interleaved", 4, 8),
+    # edge cases: fewer microbatches than stages, M == 1, S == 1
+    ("gpipe", 4, 2), ("1f1b", 4, 2), ("interleaved", 4, 2),
+    ("gpipe", 3, 1), ("1f1b", 3, 1),
+    ("gpipe", 1, 5), ("1f1b", 1, 5),
+])
+def test_schedules_match_sequential(sched, S, M):
+    w, x = _data(S, M)
+    s_obj = get_schedule(sched)
+    ref = _seq(w, x)
+    got = pipeline_apply(w, x, _body, schedule=s_obj)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    g_pipe = jax.jit(jax.grad(
+        lambda w_: jnp.sum(pipeline_apply(w_, x, _body,
+                                          schedule=s_obj) ** 2)))(w)
+    g_seq = jax.grad(lambda w_: jnp.sum(_seq(w_, x) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("v", [2, 3, 6])
+def test_interleaved_virtual_stage_permutation(v):
+    """Round-robin virtual-stage storage must not change the function."""
+    S, M = 6, 4
+    w, x = _data(S, M)
+    s_obj = get_schedule("interleaved", num_virtual=v)
+    np.testing.assert_array_equal(
+        np.asarray(pipeline_apply(w, x, _body, schedule=s_obj)),
+        np.asarray(_seq(w, x)))
+
+
+def test_uneven_virtual_stages_raise():
+    w, x = _data(5, 4)
+    with pytest.raises(ValueError, match="divis"):
+        pipeline_apply(w, x, _body,
+                       schedule=get_schedule("interleaved", num_virtual=2))
+    with pytest.raises(ValueError, match="virtual"):
+        get_schedule("1f1b", num_virtual=2)
+    with pytest.raises(ValueError, match="unknown pipeline schedule"):
+        get_schedule("2f2b")
+
+
+# ---------------------------------------------------------------------------
+# cost model: bubbles, tick tables, peak activation memory
+# ---------------------------------------------------------------------------
+
+def _check_table(plan):
+    """Dependencies strictly ordered; one F and one B max per device-tick."""
+    S, M = plan.num_stages, plan.num_microbatches
+    seen_f, seen_b = set(), set()
+    for s in range(S):
+        for m in range(M):
+            f, b = int(plan.fwd_tick[s, m]), int(plan.bwd_tick[s, m])
+            assert 0 <= f < b < plan.num_ticks
+            if s > 0:
+                assert plan.fwd_tick[s - 1, m] < f
+            if s < S - 1:
+                assert plan.bwd_tick[s + 1, m] < b
+            d = plan.stage_device(s)
+            assert (d, f) not in seen_f and (d, b) not in seen_b
+            seen_f.add((d, f))
+            seen_b.add((d, b))
+
+
+@pytest.mark.parametrize("S,M", [(2, 4), (2, 8), (4, 8), (4, 16), (8, 16),
+                                 (8, 32), (3, 7), (1, 1), (4, 1)])
+def test_tick_tables_valid(S, M):
+    for spec, v in (("gpipe", None), ("1f1b", None), ("interleaved", 2),
+                    ("interleaved", 4)):
+        if v is not None and S % v:
+            continue
+        _check_table(get_schedule(spec, num_virtual=v).plan(S, M))
+
+
+def test_bubble_ordering_and_closed_forms():
+    """1F1B strictly beats GPipe for S >= 2, M >= 2S (acceptance bound);
+    closed forms: gpipe (S-1)/(M+S-1), 1f1b (S-1)/(M+2S-1)."""
+    for S in (2, 3, 4, 8):
+        for M in (2 * S, 2 * S + 1, 4 * S, 32):
+            g, f = GPipeSchedule(), OneFOneBSchedule()
+            bg, bf = g.bubble_fraction(S, M), f.bubble_fraction(S, M)
+            assert bf < bg, (S, M, bf, bg)
+            assert bg == pytest.approx((S - 1) / (M + S - 1))
+            assert bg == pytest.approx(bubble_fraction(S, M))
+            assert bf == pytest.approx((S - 1) / (M + 2 * S - 1))
+
+
+def test_interleaved_shrinks_bubble_at_same_device_count():
+    """v virtual stages per device cut the warm-up bubble vs 1F1B running
+    one fat stage per device (both on D pipe devices)."""
+    for D, v, M in ((2, 2, 8), (4, 2, 16), (4, 4, 32)):
+        b_int = Interleaved1F1BSchedule(num_virtual=v).bubble_fraction(
+            D * v, M)
+        b_1f1b = OneFOneBSchedule().bubble_fraction(D, M)
+        assert b_int < b_1f1b, (D, v, M, b_int, b_1f1b)
+
+
+def test_peak_activation_memory():
+    """GPipe holds all M microbatches; 1F1B caps at min(M, 2S-1)."""
+    for S, M in ((4, 16), (8, 32)):
+        g, f = GPipeSchedule(), OneFOneBSchedule()
+        assert g.peak_activation_microbatches(S, M) == M
+        assert f.peak_activation_microbatches(S, M) == min(M, 2 * S - 1)
+        mb_bytes = 128 * 256 * 4
+        assert (f.peak_activation_bytes(S, M, mb_bytes)
+                < g.peak_activation_bytes(S, M, mb_bytes))
+
+
+def test_schedule_summary_keys():
+    s = get_schedule("interleaved", num_virtual=2).summary(8, 16)
+    assert s["schedule"] == "interleaved"
+    assert s["num_devices"] == 4 and s["num_virtual"] == 2
+    assert 0.0 <= s["bubble_fraction"] < 1.0
+    assert s["ticks"] > 0 and s["peak_activation_microbatches"] > 0
+
+
+def test_train_step_threads_pipeline_metrics():
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    ocfg = OptimizerConfig()
+    step = jax.jit(make_train_step(
+        cfg, QuantPolicy.off(), ocfg, pipeline_schedule="1f1b",
+        pipeline_stages=4, num_microbatches=8))
+    _, _, m = step(params, init_train_state(params, ocfg),
+                   make_batch(cfg, t=32),
+                   Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
+                   default_bits(cfg, enabled=False))
+    assert float(m["pipe_bubble"]) == pytest.approx(3 / 15)
+    assert int(m["pipe_ticks"]) == 8 + 2 * 4 - 1
+    assert int(m["pipe_peak_mb"]) == 7
+    with pytest.raises(ValueError, match="divis"):
+        make_train_step(cfg, QuantPolicy.off(), ocfg,
+                        pipeline_schedule=get_schedule("interleaved",
+                                                       num_virtual=2),
+                        pipeline_stages=5, num_microbatches=8)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: the "pipe" mesh axis
+# ---------------------------------------------------------------------------
+
 def test_pipeline_matches_sequential_and_differentiates():
     out = run_py("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import AxisType
-from repro.dist.pipeline import pipeline_apply, bubble_fraction
+from repro.dist.pipeline import pipeline_apply, bubble_fraction, get_schedule
 
 S, LPS, M, MB, D = 4, 2, 8, 2, 16   # 4 stages x 2 layers, 8 microbatches
 mesh = jax.make_mesh((S,), ("pipe",), axis_types=(AxisType.Auto,))
@@ -42,26 +224,64 @@ ref = x
 for s in range(S):
     ref = jax.vmap(lambda mb: body(w[s], mb))(ref)
 
-got = pipeline_apply(w, x, body, mesh)
-np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                           atol=1e-5, rtol=1e-5)
-print("FWD OK")
-
-# differentiability: grads through the pipeline == sequential grads
-def loss_pipe(w_):
-    return jnp.sum(pipeline_apply(w_, x, body, mesh) ** 2)
-
 def loss_seq(w_):
     h = x
     for s in range(S):
         h = jax.vmap(lambda mb: body(w_[s], mb))(h)
     return jnp.sum(h ** 2)
 
-g_pipe = jax.jit(jax.grad(loss_pipe))(w)
 g_seq = jax.grad(loss_seq)(w)
-np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
-                           atol=1e-4, rtol=1e-4)
-print("GRAD OK")
+
+for spec, virt in (("gpipe", None), ("1f1b", None), ("interleaved", 2)):
+    sched = get_schedule(spec, num_virtual=virt)
+    got = pipeline_apply(w, x, body, mesh, schedule=sched)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+    def loss_pipe(w_):
+        return jnp.sum(pipeline_apply(w_, x, body, mesh,
+                                      schedule=sched) ** 2)
+
+    g_pipe = jax.jit(jax.grad(loss_pipe))(w)
+    np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                               atol=1e-4, rtol=1e-4)
+    print(f"{sched.name} OK")
 assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
 """)
-    assert "FWD OK" in out and "GRAD OK" in out
+    assert "gpipe OK" in out and "1f1b OK" in out and "interleaved OK" in out
+
+
+def test_pipe_axis_in_mesh_builders():
+    out = run_py("""
+import jax
+from repro.launch.mesh import make_debug_mesh, pipe_axis_size, batch_axes
+
+mesh = make_debug_mesh(2, 1, pipe=2)
+assert dict(mesh.shape) == {"pipe": 2, "data": 2, "model": 1}
+assert pipe_axis_size(mesh) == 2
+assert batch_axes(mesh) == ("data",)
+assert pipe_axis_size(make_debug_mesh(2, 2)) == 1
+assert pipe_axis_size(None) == 1
+print("MESH OK")
+""")
+    assert "MESH OK" in out
+
+
+def test_production_mesh_pipe_axis_shapes():
+    # shape-only: build on the dry-run's 512-device host platform
+    out = run_py("""
+from repro.launch.mesh import make_production_mesh, pipe_axis_size
+
+m = make_production_mesh(pipe=4)
+assert dict(m.shape) == {"pipe": 4, "data": 4, "model": 16}
+assert pipe_axis_size(m) == 4
+m2 = make_production_mesh(multi_pod=True, pipe=2)
+assert dict(m2.shape) == {"pod": 2, "pipe": 2, "data": 8, "model": 16}
+try:
+    make_production_mesh(pipe=3)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "divide" in str(e)
+print("PROD OK")
+""", devices=512)
+    assert "PROD OK" in out

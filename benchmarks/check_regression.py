@@ -8,7 +8,9 @@ Designed to survive CI noise and machine drift:
 
   * rows are matched by (suite, name); rows present on only one side are
     reported informationally, never fatally (new benches don't need a
-    baseline in the same PR that adds them)
+    baseline in the same PR that adds them); a --baseline FILE that does
+    not exist yet (a whole new suite landing in this PR) warns and skips
+    the gate instead of crashing CI
   * rows whose baseline wall-time is under ``--min-us`` are skipped — the
     timer jitter on micro-rows swamps any signal
   * the per-row ratio is normalized by the MINIMUM ratio across all
@@ -69,6 +71,11 @@ def main(argv=None) -> int:
                          "(timer noise floor)")
     args = ap.parse_args(argv)
     tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", args.tolerance))
+
+    if not os.path.exists(args.baseline):
+        print(f"warning: no committed baseline at {args.baseline} (new "
+              f"benchmark suite in this PR?); skipping the regression gate")
+        return 0
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)

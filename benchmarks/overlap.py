@@ -1,0 +1,155 @@
+"""Communication-overlapped backward scan: measured step time + HLO overlap.
+
+Three measurements around ``QuantPolicy.overlap`` (core.taxonn /
+dist.async_collectives):
+
+  * ``overlap/step_walltime_{off,on}`` — the engine's train step inside a
+    shard_map over all host devices with the per-layer dW all-reduce on the
+    data axis: "off" is the blocking in-scan psum, "on" the software-
+    pipelined bucketed ring (layer i's hops overlap layer i-1's VJP).  The
+    "on" row carries ``speedup`` = t_off / t_on — the measured step-time
+    change from the schedule alone.
+  * ``overlap/hlo_overlap_fraction_{off,on}`` — ``dist.hlo_analysis.
+    overlap_fraction`` of the two compiled modules: how many collectives
+    have real compute scheduled inside their latency window.  The
+    overlapped scan's cross-iteration windows (the hops riding the carry)
+    are exactly the ones that show compute — the metric must be > 0 with
+    overlap on.
+  * ``overlap/ring_vs_psum`` — the transport alone: blocking bucketed-ring
+    all-reduce vs one fused ``lax.psum`` for a dW-sized tensor.
+
+The "on" row also carries ``modeled_hidden_comm_us``: the per-step
+interconnect time the overlapped schedule can hide on real hardware (dW
+ring bytes per layer x (L-1) overlappable layers / ICI bandwidth, the
+``hlo_analysis`` accelerator model).  Host-CPU "devices" share one memory
+system — the emulated ring has no DMA engine to overlap into — so the
+MEASURED speedup on CPU hovers at/below 1.0 while the modeled number is
+what the schedule buys on a pod; both land in the JSON so the regression
+gate tracks the schedule's cost and the model tracks its value.
+
+With fewer than 2 host devices the multi-device rows degrade to the
+single-device schedule comparison (axes=(), the ring is the identity) so
+the suite still produces comparable wall-times everywhere.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.dist.async_collectives import ring_all_reduce
+from repro.dist.hlo_analysis import (ICI_BANDWIDTH, collective_stats,
+                                     overlap_fraction)
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import Hyper, OptimizerConfig
+
+
+def _cfg(L=6):
+    return ModelConfig(
+        name="bench-overlap", family="dense", num_layers=L, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=2048,
+        compute_dtype="float32", logit_chunk=256)
+
+
+def _time(fn, args, reps):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    n_dev = len(jax.devices())
+    multi = n_dev >= 2
+    cfg = _cfg()
+    params = lm.init_params(jax.random.key(0), cfg)
+    ks = jax.random.split(jax.random.key(1), 2)
+    b, t = 8, 128
+    batch = {"tokens": jax.random.randint(ks[0], (b, t), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (b, t), 0, cfg.vocab_size)}
+    ocfg = OptimizerConfig(kind="sgd")
+    bits = default_bits(cfg, enabled=False)
+    hyper = Hyper(lr=jnp.float32(1e-2), step=jnp.int32(0))
+    opt = init_train_state(params, ocfg)
+    axes = ("data",) if multi else ()
+    mesh = jax.make_mesh((n_dev,), ("data",)) if multi else None
+    reps = 3 if quick else 10
+
+    rows = []
+    us, hlo_ov = {}, {}
+    for overlap in ("off", "on"):
+        pol = QuantPolicy(quantize_weights=False, quantize_acts=False,
+                          quantize_grads=False, kernel_backend="off",
+                          dw_psum_axes=axes, dw_num_replicas=n_dev or None,
+                          overlap=overlap)
+        step = make_train_step(cfg, pol, ocfg)
+        if multi:
+            fn = jax.jit(jax.shard_map(
+                lambda p, s, bb: step(p, s, bb, hyper, bits),
+                mesh=mesh, in_specs=(P(), P(), P("data")),
+                out_specs=(P(), P(), P()), check_vma=False))
+        else:
+            fn = jax.jit(lambda p, s, bb: step(p, s, bb, hyper, bits))
+        us[overlap] = _time(fn, (params, opt, batch), reps)
+        hlo = fn.lower(params, opt, batch).compile().as_text()
+        hlo_ov[overlap] = overlap_fraction(hlo)
+        hlo_ov[overlap]["counts"] = collective_stats(hlo)["counts"]
+
+    for overlap in ("off", "on"):
+        row = {
+            "name": f"overlap/step_walltime_{overlap}",
+            "us_per_call": us[overlap],
+            "n_devices": n_dev,
+            "dw_psum_axes": "data" if multi else "none",
+        }
+        if overlap == "on":
+            row["speedup"] = us["off"] / us["on"]
+            # ring bytes per layer dW, hideable for all but the drain layer
+            layer_bytes = sum(
+                int(jnp.asarray(x).size / cfg.num_layers) * 4
+                for x in jax.tree.leaves(params["blocks"]))
+            ring_factor = 2.0 * (n_dev - 1) / n_dev if n_dev > 1 else 0.0
+            row["modeled_hidden_comm_us"] = (
+                layer_bytes * ring_factor * (cfg.num_layers - 1)
+                / ICI_BANDWIDTH * 1e6)
+        rows.append(row)
+        ov = hlo_ov[overlap]
+        rows.append({
+            "name": f"overlap/hlo_overlap_fraction_{overlap}",
+            "us_per_call": 0.0,
+            "overlap_fraction": ov["overlap_fraction"],
+            "collectives": ov["collectives"],
+            "overlapped": ov["overlapped"],
+            "compute_ops_in_windows": ov["compute_ops_in_windows"],
+        })
+
+    # --- transport alone: bucketed ring vs fused psum ---------------------
+    if multi:
+        x = jax.random.normal(jax.random.key(2), (1024, 1024))
+
+        def ring(v):
+            return ring_all_reduce(v, ("data",), num_replicas=n_dev,
+                                   num_buckets=4)
+
+        def psum(v):
+            return jax.lax.psum(v, ("data",))
+
+        for label, f in (("ring", ring), ("psum", psum)):
+            g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
+                                      out_specs=P(), check_vma=False))
+            rows.append({
+                "name": f"overlap/allreduce_{label}_4mb",
+                # ms-scale collective rendezvous jitters hard; extra reps
+                # keep the committed baseline stable for the gate
+                "us_per_call": _time(g, (x,), 5 * reps),
+                "n_devices": n_dev,
+            })
+    return rows

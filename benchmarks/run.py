@@ -15,6 +15,8 @@ via ``benchmarks/check_regression.py``, and uploads both as artifacts.
   savings     — Table IV          (low-bitwidth savings vs full precision)
   pipeline    — Fig. 3            (fused per-layer BP vs monolithic)
   kernels     — PE datapath       (Pallas kernel microbenches, emulate+int8)
+  overlap     — (beyond paper)    (comm-overlapped backward scan, ring vs
+                                   psum, HLO overlap_fraction)
   roofline    — (beyond paper)    (dry-run roofline summary)
 """
 from __future__ import annotations
@@ -35,14 +37,15 @@ def main() -> None:
                          "BENCH_kernels.json)")
     args = ap.parse_args()
 
-    from benchmarks import (convergence, kernels_bench, overhead, pipeline,
-                            roofline, savings)
+    from benchmarks import (convergence, kernels_bench, overhead, overlap,
+                            pipeline, roofline, savings)
     suites = {
         "convergence": convergence.run,
         "overhead": overhead.run,
         "savings": savings.run,
         "pipeline": pipeline.run,
         "kernels": kernels_bench.run,
+        "overlap": overlap.run,
         "roofline": roofline.run,
     }
     if args.only:

@@ -14,6 +14,7 @@ and "enc_blocks" for encdec).  One compiled step serves every schedule.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -21,9 +22,11 @@ import jax.numpy as jnp
 
 from repro.core.taxonn import (
     QuantPolicy,
+    _bits_xs,
     backward_stack,
     default_bits_for,
     forward_stack,
+    grad_tap,
     quantize_weight_tree,
 )
 from repro.kernels.ops import kernel_backend_ctx, resolve_backend
@@ -162,6 +165,99 @@ def _bits_edge(bits, idx):
 
 
 # ---------------------------------------------------------------------------
+# Stage-sharded stack execution through dist.pipeline
+# ---------------------------------------------------------------------------
+
+# Families whose per-layer body is self-contained (no cross-layer shared
+# operand, aux identically zero) — the ones the stage-sharded pipeline
+# path can run today.  hybrid (weight-tied shared attn), encdec (encoder
+# output feeds every layer) and moe (load-balance aux) stay on the scan.
+_PIPE_EXEC_FAMILIES = ("dense", "ssm", "vlm")
+
+
+def _check_pipeline_exec(cfg: ModelConfig, policy: QuantPolicy,
+                         num_stages: int) -> None:
+    """Build-time validation for executing the stack through dist.pipeline."""
+    if cfg.family not in _PIPE_EXEC_FAMILIES:
+        raise NotImplementedError(
+            f"pipeline execution (pipeline_stages={num_stages} > 1) supports "
+            f"families {_PIPE_EXEC_FAMILIES}; {cfg.family!r} needs the "
+            f"shared-operand scan path")
+    for flag in ("stochastic", "quantize_updates", "compress_dw"):
+        if getattr(policy, flag):
+            raise NotImplementedError(
+                f"pipeline execution does not support QuantPolicy.{flag} "
+                f"yet; run with pipeline_stages=1 or disable the flag")
+    if policy.overlap == "on":
+        raise NotImplementedError(
+            "pipeline execution computes dW via vjp and cannot software-"
+            "pipeline the per-layer reduce; overlap='on' needs the scan "
+            "path (pipeline_stages=1)")
+    n = num_scan_units(cfg)
+    if n % num_stages:
+        raise ValueError(
+            f"num_layers={n} does not divide into pipeline_stages="
+            f"{num_stages} equal stages")
+
+
+def _pipeline_stack_forward(body, stacked, bits, policy: QuantPolicy,
+                            x0: Array, sched, num_stages: int,
+                            num_microbatches: int, mesh) -> Array:
+    """Run the blocks stack stage-sharded through dist.pipeline.
+
+    The stack's [L, ...] params reshape to [S, L/S, ...] stages and the
+    batch splits into M microbatches; ``pipeline_apply`` executes them
+    under ``sched`` with stages placed on the mesh's "pipe" axis.  Each
+    stage scans its own layers with the engine's forward quantization, and
+    a ``grad_tap`` at every layer input quantizes the backward cotangent —
+    so ``jax.vjp`` of this function IS the engine's G-chain (values match
+    the sequential scan bit-exactly; per-layer dW matches the reverse
+    scan's).  Unlike the scan path the full stacked dW tree materialises
+    here: stage-sharding trades the paper's one-layer gradient residency
+    for the pipe axis's parallelism.
+    """
+    from repro.dist.pipeline import pipeline_apply
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    B = x0.shape[0]
+    S, M = num_stages, num_microbatches
+    # batch % M validated by the caller (the train step's pipe branch,
+    # which needs the quotient before this function can even be built)
+    lps = L // S
+    enabled = bits.enabled
+    stage_p = jax.tree.map(lambda a: a.reshape((S, lps) + a.shape[1:]),
+                           stacked)
+    stage_b = jax.tree.map(lambda a: a.reshape((S, lps) + a.shape[1:]),
+                           _bits_xs(bits))
+    x_mb = x0.reshape((M, B // M) + x0.shape[1:])
+
+    def stage_body(bundle, h):
+        p_s, b_s = bundle
+
+        def layer(hh, xs_l):
+            p_l, b_l = xs_l
+            if policy.quantize_grads:
+                hh = grad_tap(hh, b_l["g_i"], b_l["g_f"], enabled)
+            if policy.quantize_acts:
+                hq = (enabled * quantize_ste(hh.astype(jnp.float32),
+                                             b_l["a_i"], b_l["a_f"])
+                      + (1.0 - enabled) * hh.astype(jnp.float32)
+                      ).astype(hh.dtype)
+            else:
+                hq = hh
+            wq = quantize_weight_tree(p_l, b_l["w_i"], b_l["w_f"], enabled,
+                                      policy.quantize_weights)
+            y, _aux = body(wq, (), hq, b_l)
+            return y, None
+
+        h, _ = xscan(layer, h, (p_s, b_s))
+        return h
+
+    y = pipeline_apply((stage_p, stage_b), x_mb, stage_body, mesh,
+                       schedule=sched)
+    return y.reshape((B,) + y.shape[2:])
+
+
+# ---------------------------------------------------------------------------
 # The TaxoNN train step
 # ---------------------------------------------------------------------------
 
@@ -194,10 +290,16 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                     kernel_backend: Optional[str] = None,
                     pipeline_schedule=None,
                     pipeline_stages: Optional[int] = None,
-                    num_microbatches: Optional[int] = None):
+                    num_microbatches: Optional[int] = None,
+                    overlap: Optional[str] = None):
     """``kernel_backend`` overrides ``policy.kernel_backend`` ("off" |
     "emulate" | "int8" | "auto"; auto = off on CPU, int8 on TPU) and selects
     the datapath for the dense-unit matmuls in the step's hot loops.
+
+    ``overlap`` ("off" | "on") overrides ``policy.overlap``: with "on" the
+    engine's backward scan software-pipelines each layer's dW all-reduce
+    one scan step deep (start at layer i, wait while layer i-1 computes —
+    see ``core.taxonn.backward_stack`` / ``dist.async_collectives``).
 
     ``pipeline_schedule`` ("gpipe" | "1f1b" | "interleaved" or a
     ``repro.dist.pipeline.Schedule``) declares the pipeline schedule this
@@ -205,9 +307,17 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
     devices and the batch is split into ``num_microbatches`` microbatches.
     It is validated at build time and surfaces the schedule's tick-table
     estimates (``pipe_bubble`` / ``pipe_ticks`` / ``pipe_peak_mb``) in the
-    step metrics; the returned step exposes it as ``step.pipeline_schedule``.
+    step metrics.  With ``pipeline_stages > 1`` the TaxoNN engine's blocks
+    stack EXECUTES stage-sharded through ``dist.pipeline.pipeline_apply``
+    (the schedule places stages on the mesh's "pipe" axis; see
+    ``_pipelined_stack``); the returned step exposes the schedule as
+    ``step.pipeline_schedule``.
     """
     policy = policy or QuantPolicy.off()
+    if overlap is not None:
+        if overlap not in ("off", "on"):
+            raise ValueError(f"overlap must be 'off' or 'on', got {overlap!r}")
+        policy = dataclasses.replace(policy, overlap=overlap)
     optim_cfg = optim_cfg or OptimizerConfig()
     backend = resolve_backend(
         kernel_backend if kernel_backend is not None
@@ -237,6 +347,10 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
 
     fam = cfg.family
     scale = policy.grad_scale
+    pipe_exec = sched is not None and pipeline_stages and int(
+        pipeline_stages) > 1
+    if pipe_exec:
+        _check_pipeline_exec(cfg, policy, int(pipeline_stages))
 
     def _step_impl(params, opt_state, batch, hyper: Hyper, bits: dict,
                    rng: Optional[Array] = None):
@@ -292,9 +406,30 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                 return body(p, sh[0], x, b_l)
             return body(p, sh, x, b_l)
 
-        x_final, caches, aux_sum = forward_stack(
-            body_sh, params["blocks"], shared, x0, main_bits, policy,
-            quantize_shared=quantize_shared)
+        pipe_vjp = None
+        if pipe_exec:
+            # stage-sharded execution through dist.pipeline: the bodies run
+            # per-microbatch, so they need microbatch-shaped positions
+            S_pipe, M_pipe = int(pipeline_stages), int(num_microbatches or 1)
+            if bsz % M_pipe:
+                raise ValueError(f"global batch {bsz} does not divide into "
+                                 f"num_microbatches={M_pipe}")
+            pos_mb = jnp.broadcast_to(jnp.arange(total_t),
+                                      (bsz // M_pipe, total_t))
+            body_mb = _make_body(cfg, pos_mb)
+            mesh = jax.sharding.get_abstract_mesh()
+
+            def fwd_pipe(blocks, x0_):
+                return _pipeline_stack_forward(
+                    body_mb, blocks, main_bits, policy, x0_, sched,
+                    S_pipe, M_pipe, mesh)
+
+            x_final, pipe_vjp = jax.vjp(fwd_pipe, params["blocks"], x0)
+            aux_sum = jnp.float32(0.0)
+        else:
+            x_final, caches, aux_sum = forward_stack(
+                body_sh, params["blocks"], shared, x0, main_bits, policy,
+                quantize_shared=quantize_shared)
 
         # ---- head (loss) --------------------------------------------------
         head_f = _head_fn(cfg, batch, policy, _bits_edge(main_bits, -1), scale)
@@ -304,10 +439,29 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         metrics["loss_total"] = loss + AUX_COEF * aux_sum
 
         # ---- the G-chain: reverse scan with fused per-layer updates ------
-        G_in, new_blocks, new_blocks_opt, dshared, gsq = backward_stack(
-            body_sh, params["blocks"], shared, opt_state["blocks"], caches,
-            main_bits, G_final, hyper, policy, optim_cfg, AUX_COEF,
-            base_key=rng, quantize_shared=quantize_shared)
+        if pipe_exec:
+            # vjp through the stage-sharded pipeline (grad taps reproduce
+            # the engine's per-layer G quantization); updates land on the
+            # stacked tree, vmapped per layer for exact scan parity
+            d_blocks, G_in = pipe_vjp(G_final)
+
+            def prep(g):
+                g = g.astype(jnp.float32) / scale
+                if policy.dw_psum_axes:
+                    g = jax.lax.psum(g, policy.dw_psum_axes)
+                return g
+            d_blocks = jax.tree.map(prep, d_blocks)
+            gsq = sum(jnp.sum(jnp.square(g))
+                      for g in jax.tree.leaves(d_blocks))
+            new_blocks, new_blocks_opt = jax.vmap(
+                lambda p, g, s: apply_update(p, g, s, hyper, optim_cfg)
+            )(params["blocks"], d_blocks, opt_state["blocks"])
+            dshared = shared  # unused: pipe families carry no shared operand
+        else:
+            G_in, new_blocks, new_blocks_opt, dshared, gsq = backward_stack(
+                body_sh, params["blocks"], shared, opt_state["blocks"],
+                caches, main_bits, G_final, hyper, policy, optim_cfg,
+                AUX_COEF, base_key=rng, quantize_shared=quantize_shared)
 
         new_params = dict(params)
         new_opt = dict(opt_state)

@@ -29,7 +29,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.dist.async_collectives import (tree_all_reduce_start,
+                                          tree_all_reduce_wait)
 from repro.dist.collectives import compressed_psum
 from repro.optim import OptimizerConfig, Hyper, apply_update
 from repro.util.scan import xscan
@@ -63,8 +66,20 @@ class QuantPolicy:
     # ``dw_psum_axes`` naming mesh axes (engine running in a shard_map) the
     # all-reduce moves compressed bytes; with no axes it is the codec
     # round-trip only (single-replica numerics of the same wire format).
+    # With axes named and ``compress_dw=False`` the dW all-reduce is a
+    # dense psum over those axes.
     compress_dw: bool = False
     dw_psum_axes: tuple = ()
+    # Communication-overlapped backward scan ("off" | "on"): layer i STARTS
+    # its dW all-reduce (dense or compressed, via
+    # dist.async_collectives) and WAITS one scan step later, so the
+    # collective overlaps layer i-1's G-step/VJP compute — the paper's TDM
+    # overlap applied to the interconnect.  With no ``dw_psum_axes`` this is
+    # a pure schedule change (bit-identical results).
+    overlap: str = "off"
+    # Ring-group size override for the overlapped reduce (None = resolve
+    # from the ambient mesh at trace time).
+    dw_num_replicas: Optional[int] = None
 
     @staticmethod
     def off() -> "QuantPolicy":
@@ -107,6 +122,34 @@ def _quant_grad(g: Array, g_i, g_f, enabled: Array, policy: QuantPolicy,
     else:
         q = quantize_ste(gf, g_i, g_f)
     return (enabled * q + (1.0 - enabled) * gf).astype(g.dtype)
+
+
+@jax.custom_vjp
+def grad_tap(x: Array, g_i, g_f, enabled) -> Array:
+    """Identity forward whose COTANGENT is quantized to the (g_i, g_f)
+    grid — the G-chain's per-layer ``G <- q(G)`` (Eq. 8's low-bit signal)
+    expressed as a forward-graph annotation.  Inserting this at each layer
+    input makes a plain ``jax.vjp`` through the stack compute the same
+    quantized G-chain the engine's reverse scan does — which is how the
+    stage-sharded pipeline path (``dist.pipeline``) keeps engine numerics
+    without a hand-written backward."""
+    return x
+
+
+def _grad_tap_fwd(x, g_i, g_f, enabled):
+    return x, (g_i, g_f, enabled)
+
+
+def _grad_tap_bwd(res, ct):
+    g_i, g_f, enabled = res
+    ctf = ct.astype(jnp.float32)
+    q = quantize_ste(ctf, g_i, g_f)
+    ct_q = (enabled * q + (1.0 - enabled) * ctf).astype(ct.dtype)
+    return (ct_q, jnp.zeros_like(g_i), jnp.zeros_like(g_f),
+            jnp.zeros_like(enabled))
+
+
+grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
 
 
 def _bits_xs(bits: BitSchedule) -> dict:
@@ -172,6 +215,15 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
       4. W_i <- W_i - lr * dW_i  (fused update; DP all-reduce of dW_i is
          inside this scan body -> overlapped with step i-1's compute)
 
+    With ``policy.overlap == "on"`` step 4 is software-pipelined one scan
+    step deep: layer i STARTS its dW all-reduce (a bucketed ppermute ring,
+    dense or compressed — dist.async_collectives) and the update lands when
+    the NEXT iteration (processing layer i-1) waits on the handle riding in
+    the carry, so the collective's hops overlap layer i-1's VJP/G-step
+    compute.  The last in-flight layer is flushed after the scan.  With no
+    ``dw_psum_axes`` the handle degrades to the identity and the overlapped
+    scan computes bit-identical results — a pure schedule change.
+
     Gradient-scale convention: ``G_out`` arrives SCALED by policy.grad_scale
     (loss scaling for the low-bit chain).  dW is un-scaled just before the
     update; G and dShared stay in the scaled domain (callers un-scale when
@@ -179,16 +231,33 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
 
     Returns (G_in, new_stacked, new_opt, dShared_accum_SCALED, grad_sq_sum).
     """
+    if policy.overlap not in ("off", "on"):
+        raise ValueError(f"QuantPolicy.overlap must be 'off' or 'on', got "
+                         f"{policy.overlap!r}")
+    overlap = policy.overlap == "on"
     enabled = bits.enabled
     n_units = jax.tree.leaves(stacked)[0].shape[0]
     inv_scale = 1.0 / policy.grad_scale
 
     shared_f32 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), shared)
 
-    def bwd(carry, xs):
-        G, dshared_acc, gsq = carry
-        p_l, opt_l, x_l, b_l, idx = xs
+    def _key_for(idx):
+        return (jax.random.fold_in(base_key, idx)
+                if (base_key is not None and policy.stochastic) else None)
 
+    def _quant_update(g, b_l, key):
+        """Strict-paper mode: quantize the update itself (post-reduction)."""
+        if not policy.quantize_updates:
+            return g
+        upd = hyper.lr * g
+        if policy.stochastic and key is not None:
+            updq = quantize_stochastic(upd, b_l["g_i"], b_l["g_f"], key)
+        else:
+            updq = quantize_ste(upd, b_l["g_i"], b_l["g_f"])
+        upd = enabled * updq + (1.0 - enabled) * upd
+        return upd / jnp.maximum(hyper.lr, 1e-20)
+
+    def _vjp_layer(G, p_l, x_l, b_l):
         def f(pw, sw, xx):
             wq = quantize_weight_tree(pw, b_l["w_i"], b_l["w_f"], enabled,
                                       policy.quantize_weights)
@@ -201,39 +270,103 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         dW, dS, dX = vjp((G.astype(y.dtype),
                           jnp.asarray(aux_coef * policy.grad_scale,
                                       jnp.float32)))
+        dW = jax.tree.map(lambda g: g.astype(jnp.float32) * inv_scale, dW)
+        return dW, dS, dX
 
-        key = (jax.random.fold_in(base_key, idx)
-               if (base_key is not None and policy.stochastic) else None)
-        G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled, policy, key)
+    if not overlap:
+        def bwd(carry, xs):
+            G, dshared_acc, gsq = carry
+            p_l, opt_l, x_l, b_l, idx = xs
+            dW, dS, dX = _vjp_layer(G, p_l, x_l, b_l)
+            key = _key_for(idx)
+            G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled, policy,
+                                 key)
 
-        # un-scale, optionally quantize the update itself (strict paper mode)
-        def prep(g):
-            g = g.astype(jnp.float32) * inv_scale
-            if policy.compress_dw:
-                # per-layer dW through the int8 block-scaled wire format
-                # (and its all-reduce when mesh axes are named) — issued
-                # inside the scan body so it overlaps the next layer's
-                # G-step, the paper's timing overlap at pod scale
-                g = compressed_psum(g, policy.dw_psum_axes)
-            if policy.quantize_updates:
-                upd = hyper.lr * g
-                if policy.stochastic and key is not None:
-                    updq = quantize_stochastic(upd, b_l["g_i"], b_l["g_f"], key)
-                else:
-                    updq = quantize_ste(upd, b_l["g_i"], b_l["g_f"])
-                upd = enabled * updq + (1.0 - enabled) * upd
-                g = upd / jnp.maximum(hyper.lr, 1e-20)
-            return g
-        dW = jax.tree.map(prep, dW)
+            def prep(g):
+                if policy.compress_dw:
+                    # per-layer dW through the int8 block-scaled wire format
+                    # (and its all-reduce when mesh axes are named) — issued
+                    # inside the scan body so it overlaps the next layer's
+                    # G-step, the paper's timing overlap at pod scale
+                    g = compressed_psum(g, policy.dw_psum_axes,
+                                        num_replicas=policy.dw_num_replicas)
+                elif policy.dw_psum_axes:
+                    g = lax.psum(g, policy.dw_psum_axes)
+                return _quant_update(g, b_l, key)
+            dW = jax.tree.map(prep, dW)
 
-        new_p, new_opt = apply_update(p_l, dW, opt_l, hyper, optim_cfg)
-        gsq = gsq + sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dW))
+            new_p, new_opt = apply_update(p_l, dW, opt_l, hyper, optim_cfg)
+            gsq = gsq + sum(jnp.sum(jnp.square(g))
+                            for g in jax.tree.leaves(dW))
+            dshared_acc = jax.tree.map(
+                lambda a, d: a + d.astype(jnp.float32), dshared_acc, dS)
+            return (G_next, dshared_acc, gsq), (new_p, new_opt)
+
+        xs = (stacked, opt_stacked, caches, _bits_xs(bits),
+              jnp.arange(n_units, dtype=jnp.int32))
+        (G_in, dshared, gsq), (new_stacked, new_opt) = xscan(
+            bwd, (G_out, shared_f32, jnp.float32(0.0)), xs, reverse=True)
+        return G_in, new_stacked, new_opt, dshared, gsq
+
+    # ---- communication-overlapped software pipeline ----------------------
+    def _start(dW, dummy=False):
+        return tree_all_reduce_start(dW, policy.dw_psum_axes,
+                                     compressed=policy.compress_dw,
+                                     num_replicas=policy.dw_num_replicas,
+                                     dummy=dummy)
+
+    def _finalize(pending):
+        """Wait on the in-flight reduce and land the (delayed) update."""
+        dW = tree_all_reduce_wait(pending["h"])
+        key = _key_for(pending["idx"])
+        dW = jax.tree.map(lambda g: _quant_update(g, pending["bits"], key),
+                          dW)
+        new_p, new_opt = apply_update(pending["p"], dW, pending["opt"],
+                                      hyper, optim_cfg)
+        gsq_inc = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dW))
+        return new_p, new_opt, gsq_inc
+
+    def bwd(carry, xs):
+        G, dshared_acc, gsq, pending = carry
+        p_l, opt_l, x_l, b_l, idx = xs
+        dW, dS, dX = _vjp_layer(G, p_l, x_l, b_l)
+        G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled, policy,
+                             _key_for(idx))
+        # start layer i's reduce; land layer i+1's (its hops overlapped
+        # THIS iteration's VJP compute above)
+        handles = _start(dW)
+        fin_p, fin_opt, gsq_inc = _finalize(pending)
+        pending_new = {"p": p_l, "opt": opt_l, "h": handles, "bits": b_l,
+                       "idx": idx}
         dshared_acc = jax.tree.map(
             lambda a, d: a + d.astype(jnp.float32), dshared_acc, dS)
-        return (G_next, dshared_acc, gsq), (new_p, new_opt)
+        return (G_next, dshared_acc, gsq + gsq_inc, pending_new), \
+            (fin_p, fin_opt)
 
+    def slice0(tree, dtype=None):
+        return jax.tree.map(
+            lambda a: jnp.zeros(a.shape[1:], dtype or a.dtype), tree)
+
+    pending0 = {
+        "p": slice0(stacked),
+        "opt": slice0(opt_stacked),
+        # warm-up: the handle a start on zeros would yield, no hops burned
+        "h": _start(slice0(stacked, jnp.float32), dummy=True),
+        "bits": slice0(_bits_xs(bits)),
+        "idx": jnp.int32(0),
+    }
     xs = (stacked, opt_stacked, caches, _bits_xs(bits),
           jnp.arange(n_units, dtype=jnp.int32))
-    (G_in, dshared, gsq), (new_stacked, new_opt) = xscan(
-        bwd, (G_out, shared_f32, jnp.float32(0.0)), xs, reverse=True)
-    return G_in, new_stacked, new_opt, dshared, gsq
+    (G_in, dshared, gsq, pending), (fin_stacked, fin_opt) = xscan(
+        bwd, (G_out, shared_f32, jnp.float32(0.0), pending0), xs,
+        reverse=True)
+    # drain: layer 0's reduce is still in flight after the scan
+    flush_p, flush_opt, gsq_f = _finalize(pending)
+    # re-align: the reverse scan's ys slot i holds the *finalized* layer
+    # i+1 (slot n-1 holds the warm-up dummy); layer 0 is the drain value
+    def align(flush, ys):
+        return jax.tree.map(
+            lambda f, y: jnp.concatenate([f[None], y[:-1]], axis=0),
+            flush, ys)
+    return (G_in, align(flush_p, fin_stacked), align(flush_opt, fin_opt),
+            dshared, gsq + gsq_f)

@@ -1,0 +1,279 @@
+"""Bucketed async ring all-reduce: chunked ``lax.ppermute`` + start/wait.
+
+The blocking collectives in ``dist.collectives`` issue one monolithic op per
+tensor; XLA is free to overlap it with independent compute, but the backward
+scan gives it nothing independent to overlap WITH — the scan body consumes
+the reduced dW immediately.  This module supplies the two pieces the
+communication-overlapped backward scan (``core.taxonn.backward_stack`` with
+``QuantPolicy.overlap="on"``) is built from:
+
+  * a **ring all-reduce** decomposed into chunked ``lax.ppermute`` steps
+    (CATERPILLAR's interleaved ring reduction, Li & Pedram 2017): the tensor
+    is split into the ring's g segments and, optionally, ``num_buckets``
+    independent bucket streams, so each hop moves a small chunk the
+    scheduler can interleave with MXU work instead of one long transfer;
+
+  * an **AsyncHandle start/wait API** that splits the ring at its natural
+    seam so the two halves can live in *different* scan iterations:
+
+        handle = all_reduce_start(dW_i, axes)     # scan step i
+        ... next layer's G-step/VJP compute ...   # overlap window
+        dW_i   = all_reduce_wait(handle)          # scan step i+1
+
+    ``AsyncHandle`` is a registered pytree, so it rides in the scan carry;
+    every array it holds has a static shape, making the carry scan-legal.
+
+Dense split: ``start`` runs the reduce-scatter phase (g-1 chunked hops) and
+the carry holds only the 1/g-sized reduced shard; ``wait`` runs the
+all-gather phase.  Compressed split (the int8 wire format of
+``quant.compression``): ``start`` compresses and issues the first
+circulate hop; ``wait`` finishes the remaining hops, decompressing and
+accumulating as payloads arrive — the same per-replica
+compress-once/decompress-g-times numerics as ``collectives.compressed_psum``
+(addend set identical; only the summation order differs with ring position).
+
+Axes semantics match ``collectives.compressed_psum``: ``axes`` must name
+mesh axes of an enclosing ``shard_map`` body; empty axes (or a group of
+one) degrade to the identity — ``wait(start(x)) == x`` bit-exactly, which
+is what makes the overlapped scan a pure *schedule* change on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+from repro.util import jaxcompat as _jaxcompat  # noqa: F401  (installs shims)
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.collectives import compressed_psum
+from repro.quant.compression import compress_int8, decompress_int8
+
+Array = jax.Array
+
+# Auto-bucketing: one bucket per this many payload bytes (capped) so large
+# dW tensors become several independent ring streams whose chunks the
+# scheduler can interleave, while small tensors stay single-stream.
+BUCKET_BYTES = 1 << 20
+MAX_BUCKETS = 4
+
+
+def group_size(axes: Iterable[str], num_replicas: Optional[int] = None) -> int:
+    """Resolve the reduction-group size for named mesh axes.
+
+    ``num_replicas`` overrides (callers inside a ``shard_map`` body know
+    their mesh); otherwise the ambient (abstract) mesh is consulted.
+    """
+    axes = tuple(axes)
+    if num_replicas is not None:
+        return int(num_replicas)
+    if not axes:
+        return 1
+    mesh = jax.sharding.get_abstract_mesh()
+    shape = dict(getattr(mesh, "shape", {}) or {})
+    n = 1
+    for a in axes:
+        if a not in shape:
+            raise ValueError(
+                f"cannot resolve ring-group size: axis {a!r} not in the "
+                f"ambient mesh {tuple(shape)}; pass num_replicas= explicitly")
+        n *= shape[a]
+    return n
+
+
+def _num_buckets(nbytes: int, num_buckets: Optional[int]) -> int:
+    if num_buckets is not None:
+        return max(1, int(num_buckets))
+    return max(1, min(MAX_BUCKETS, nbytes // BUCKET_BYTES))
+
+
+def _ring_perm(g: int) -> Tuple[Tuple[int, int], ...]:
+    return tuple((i, (i + 1) % g) for i in range(g))
+
+
+def _seg(chunks: Array, i) -> Array:
+    """chunks[i % g] with a traced index."""
+    g = chunks.shape[0]
+    return lax.dynamic_index_in_dim(chunks, jnp.mod(i, g), 0, keepdims=False)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AsyncHandle:
+    """An in-flight all-reduce.  Pytree (scan-carry safe): ``arrays`` are
+    the in-flight chunks, everything else is static metadata."""
+
+    arrays: Tuple[Array, ...]
+    kind: str                      # "identity" | "dense" | "compressed"
+    axis: Optional[str]
+    g: int
+    shape: Tuple[int, ...]
+    dtype: object
+    n_buckets: int
+
+    def tree_flatten(self):
+        return (tuple(self.arrays),
+                (self.kind, self.axis, self.g, self.shape, self.dtype,
+                 self.n_buckets))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children), *aux)
+
+
+def _to_chunks(x: Array, g: int, n_buckets: int) -> Array:
+    """[...] -> [n_buckets, g, c] zero-padded chunk view (f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    c = -(-flat.size // (g * n_buckets))
+    flat = jnp.pad(flat, (0, g * n_buckets * c - flat.size))
+    # bucket-major so each bucket holds a contiguous [g, c] ring layout
+    return flat.reshape(n_buckets, g, c)
+
+
+def _from_chunks(chunks: Array, shape, dtype) -> Array:
+    n = 1
+    for d in shape:
+        n *= d
+    return chunks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense ring: start = reduce-scatter phase, wait = all-gather phase
+# ---------------------------------------------------------------------------
+
+def _reduce_scatter(bucket: Array, axis: str, g: int, hop) -> Array:
+    """One bucket [g, c] -> this device's reduced shard [c] after g-1 hops."""
+    idx = lax.axis_index(axis)
+    acc = _seg(bucket, idx)
+    for s in range(1, g):
+        acc = hop(acc)
+        acc = acc + _seg(bucket, idx - s)
+    return acc                     # device d owns reduced segment (d+1) % g
+
+
+def _all_gather_ring(shard: Array, axis: str, g: int) -> Array:
+    """Reduced shard [c] (segment (d+1)%g on device d) -> full [g, c]."""
+    perm = _ring_perm(g)
+    idx = lax.axis_index(axis)
+    c = shard.shape[0]
+    out = jnp.zeros((g, c), shard.dtype)
+    out = lax.dynamic_update_index_in_dim(out, shard, jnp.mod(idx + 1, g), 0)
+    cur = shard
+    for s in range(1, g):
+        cur = lax.ppermute(cur, axis, perm)
+        # arrived from device d-s, which owned segment (d-s+1) % g
+        out = lax.dynamic_update_index_in_dim(out, cur,
+                                              jnp.mod(idx - s + 1, g), 0)
+    return out
+
+
+def all_reduce_start(x: Array, axes: Iterable[str] = (), *,
+                     compressed: bool = False,
+                     num_replicas: Optional[int] = None,
+                     num_buckets: Optional[int] = None,
+                     dummy: bool = False) -> AsyncHandle:
+    """Begin an all-reduce of ``x`` over the named mesh axes.
+
+    Multi-axis groups ring over the combined axes (``lax.ppermute`` accepts
+    the axis tuple and flattens it to one logical ring).  Returns a handle
+    whose in-flight arrays are what must travel the scan carry.
+
+    With no axes (or a group of one) there is nothing to move, but the
+    handle still reproduces the matching ``collectives.compressed_psum``
+    numerics: the compressed form carries the codec round-trip of ``x``
+    (times ``num_replicas`` when an explicit no-mesh override simulates a
+    replicated sum), so the overlapped scan stays bit-identical to the
+    blocking one on a single device.
+
+    ``dummy=True`` skips the start-phase hops and returns the handle a
+    start on an ALL-ZERO ``x`` would produce (every partial sum is zero),
+    with identical array shapes/dtypes — the overlapped scan's warm-up
+    carry, built without burning g-1 hops per bucket on garbage.  The wait
+    side needs no flag: it runs uniformly inside the scan.
+    """
+    axes = tuple(axes)
+    g = group_size(axes, num_replicas)
+    hop_perm = _ring_perm(g)
+
+    def hop(v):
+        return v if dummy else lax.ppermute(v, axis, hop_perm)
+
+    if not axes or g == 1:
+        if compressed:
+            # the blocking wire-format numerics, kept in ONE place
+            x = compressed_psum(x, (), num_replicas=num_replicas)
+        return AsyncHandle((x,), "identity", None, 1, tuple(x.shape),
+                           x.dtype, 1)
+    axis = axes if len(axes) > 1 else axes[0]
+    if compressed:
+        payload, scales = compress_int8(x)
+        acc = decompress_int8(payload, scales, x.shape, jnp.float32)
+        payload = hop(payload)                           # first hop in flight
+        scales = hop(scales)
+        return AsyncHandle((acc, payload, scales), "compressed", axis, g,
+                           tuple(x.shape), x.dtype, 1)
+    n_buckets = _num_buckets(x.size * 4, num_buckets)
+    chunks = _to_chunks(x, g, n_buckets)
+    shards = tuple(_reduce_scatter(chunks[b], axis, g, hop)
+                   for b in range(n_buckets))
+    return AsyncHandle(shards, "dense", axis, g, tuple(x.shape), x.dtype,
+                       n_buckets)
+
+
+def all_reduce_wait(handle: AsyncHandle) -> Array:
+    """Complete an in-flight all-reduce and return the elementwise sum
+    (identical on every ring member)."""
+    if handle.kind == "identity":
+        return handle.arrays[0]
+    if handle.kind == "compressed":
+        acc, payload, scales = handle.arrays
+        perm = _ring_perm(handle.g)
+        for s in range(1, handle.g):
+            acc = acc + decompress_int8(payload, scales, handle.shape,
+                                        jnp.float32)
+            if s < handle.g - 1:
+                payload = lax.ppermute(payload, handle.axis, perm)
+                scales = lax.ppermute(scales, handle.axis, perm)
+        return acc.astype(handle.dtype)
+    assert handle.kind == "dense", handle.kind
+    gathered = jnp.stack([_all_gather_ring(s, handle.axis, handle.g)
+                          for s in handle.arrays])
+    return _from_chunks(gathered, handle.shape, handle.dtype)
+
+
+def ring_all_reduce(x: Array, axes: Iterable[str] = (), *,
+                    compressed: bool = False,
+                    num_replicas: Optional[int] = None,
+                    num_buckets: Optional[int] = None) -> Array:
+    """Blocking convenience wrapper: ``wait(start(x))`` in one call."""
+    return all_reduce_wait(all_reduce_start(
+        x, axes, compressed=compressed, num_replicas=num_replicas,
+        num_buckets=num_buckets))
+
+
+# ---------------------------------------------------------------------------
+# tree-level API (the backward scan reduces one layer's dW tree per step)
+# ---------------------------------------------------------------------------
+
+def _is_handle(x) -> bool:
+    return isinstance(x, AsyncHandle)
+
+
+def tree_all_reduce_start(tree, axes: Iterable[str] = (), *,
+                          compressed: bool = False,
+                          num_replicas: Optional[int] = None,
+                          num_buckets: Optional[int] = None,
+                          dummy: bool = False):
+    """Start one all-reduce per leaf; returns a tree of AsyncHandles."""
+    return jax.tree.map(
+        lambda x: all_reduce_start(x, axes, compressed=compressed,
+                                   num_replicas=num_replicas,
+                                   num_buckets=num_buckets, dummy=dummy),
+        tree)
+
+
+def tree_all_reduce_wait(handles):
+    """Wait on a tree of AsyncHandles (as produced by tree_all_reduce_start)."""
+    return jax.tree.map(all_reduce_wait, handles, is_leaf=_is_handle)

@@ -50,17 +50,24 @@ def dense_psum_tree(grads, mesh, axes: Iterable[str]):
 def compressed_psum(x, axes: Iterable[str] = (), num_replicas: int = None):
     """One-tensor int8 block-scaled all-reduce (the dW wire format).
 
-    Must run inside a context where ``axes`` are named mesh axes (a
-    shard_map body) when ``axes`` is non-empty; with empty axes (or a
-    1-replica reduction) it degrades to the pure codec round-trip — the
-    wire-format numerics with no collective.  This is the form the TaxoNN
-    engine's backward scan calls per layer (QuantPolicy.compress_dw): the
-    int8 dW tiles the fused kernels produce are exactly this payload.
+    The public per-tensor entry point: the TaxoNN engine's backward scan
+    calls it per layer (``QuantPolicy.compress_dw``) and
+    ``compressed_psum_tree`` maps it over a gradient tree inside its own
+    shard_map.  With ``axes`` naming mesh axes it must run where those
+    axes are bound (a shard_map body) and moves the compressed
+    payload+scales over the interconnect.  With empty axes it is the pure
+    codec round-trip — the wire-format numerics with no collective — and
+    honors ``num_replicas`` as the simulated reduction size: ``n``
+    replicas of a replicated value sum to ``n * decompress(compress(x))``,
+    matching what the mesh path returns for the same replicated input.
     """
     axes = tuple(axes)
     payload, scales = compress_int8(x)
     if not axes or num_replicas == 1:
-        return decompress_int8(payload, scales, x.shape, x.dtype)
+        dec = decompress_int8(payload, scales, x.shape, x.dtype)
+        if not axes and num_replicas is not None and num_replicas > 1:
+            dec = (dec.astype(jnp.float32) * num_replicas).astype(x.dtype)
+        return dec
     pg = lax.all_gather(payload, axes)   # [n, N] int8 on the wire
     sg = lax.all_gather(scales, axes)    # [n, N/BLOCK] f32
     dec = jax.vmap(

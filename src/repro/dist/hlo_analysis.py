@@ -16,7 +16,25 @@ collective-permute one payload per hop.
 tick count of a pipeline schedule's plan (``dist.pipeline``), so the
 bubble/traffic tradeoff of GPipe vs 1F1B vs interleaved is a measured
 quantity: fewer ticks under the same permute traffic means more bytes in
-flight per tick of schedule time.
+flight per tick of schedule time.  It is STRICT about pairing: a module
+with unmatched ``-start``/``-done`` ops raises instead of silently
+attributing bytes to a window the compiler never closed.
+
+``overlap_fraction`` measures whether the compiler actually scheduled
+compute into each collective's latency window: for async pairs the window
+is start..done; for synchronous collectives it is issue..first-REAL-
+consumer (pure data-movement consumers — the carry stores a rolled scan
+wraps around an in-flight result — are chased through), and a result that
+reaches a loop-body ROOT through movement only is LOOP-CARRIED: its
+consumer is the next iteration's wait, so it counts as overlapped by
+construction.  A collective with at least one real compute op
+(dot/fusion/while/elementwise — not parameters, tuples, data-movement
+fusions or other collectives) inside its window — or a loop-carried one —
+counts as overlapped; the fraction is overlapped / total.  This is the
+measured counterpart of the overlapped backward scan
+(``core.taxonn.backward_stack(overlap="on")``): the ring hops it issues at
+layer i are only worth their bytes if layer i-1's VJP work lands between
+them and their consumer.
 
 ``roofline_terms`` converts (flops, hbm bytes, collective bytes) into
 per-step seconds under a fixed accelerator model and names the dominant
@@ -25,6 +43,7 @@ module only measures one artifact.
 """
 from __future__ import annotations
 
+import bisect
 import re
 from typing import Dict
 
@@ -123,13 +142,17 @@ def collective_stats(hlo_text: str, default_group_size: int = 2) -> Dict:
     per replica-group size via ``_wire_factor``.  Ops whose replica groups
     are not printed (or are empty) fall back to ``default_group_size`` —
     the g=2 default reproduces the old result-shape estimate for
-    all-reduce (factor 1.0) while staying finite for the others.
+    all-reduce (factor 1.0) while staying finite for the others.  A
+    ``-done`` whose operand names no recorded ``-start`` is counted in
+    ``unmatched_dones`` (its bytes were never attributed — malformed or
+    truncated HLO; ``per_tick_attribution`` refuses such modules).
     """
     counts: Dict[str, int] = {}
     by_kind_bytes: Dict[str, float] = {}
     moved = 0.0
     starts: Dict[str, str] = {}        # ssa name -> kind, awaiting a done
     async_pairs = 0
+    unmatched_dones = 0
     for m in _COLLECTIVE_OP_RE.finditer(hlo_text):
         kind, suffix = m.group("kind"), m.group("suffix")
         line = m.group(0)
@@ -137,6 +160,8 @@ def collective_stats(hlo_text: str, default_group_size: int = 2) -> Dict:
             ref = _OPERAND_REF_RE.search(m.group("args"))
             if ref and starts.pop(ref.group(1), None) is not None:
                 async_pairs += 1
+            else:
+                unmatched_dones += 1
             continue                   # bytes were counted at the start op
         if suffix == "-start":
             starts[m.group("name")] = kind
@@ -151,6 +176,175 @@ def collective_stats(hlo_text: str, default_group_size: int = 2) -> Dict:
         "by_kind_bytes": by_kind_bytes,
         "async_pairs": async_pairs,
         "unmatched_starts": len(starts),
+        "unmatched_dones": unmatched_dones,
+    }
+
+
+# any op line: "%name = <type-or-tuple> opcode(" — used by overlap_fraction
+_ANY_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(?P<opcode>[\w\-]+)\(")
+# ops that occupy no functional-unit time: bookkeeping, not overlap evidence
+_FREE_OPCODES = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "domain", "opt-barrier",
+})
+# fusion-name tokens that are pure data movement; a fusion whose name is
+# built ONLY from these (e.g. "bitcast_dynamic-update-slice_fusion", the
+# loop-carry store a scan wraps around a collective result) is transparent:
+# it neither counts as overlap evidence nor terminates a latency window
+_MOVE_TOKENS = frozenset({
+    "bitcast", "copy", "dynamic-update-slice", "dynamic-slice", "slice",
+    "transpose", "reshape", "convert", "concatenate", "pad", "fusion",
+})
+
+
+def _is_data_movement(opcode: str, name: str) -> bool:
+    if opcode in _FREE_OPCODES:
+        return True
+    if opcode != "fusion":
+        return False
+    base = name.split(".")[0]          # strip the ".N" uniquing suffix
+    return all(tok in _MOVE_TOKENS for tok in base.split("_") if tok)
+
+
+# a ring reduction's own in-chain ops: the hop permutes and the accumulate
+# adds between them.  Chasing through these (in addition to data movement)
+# lets the loop-carried test see a chained ring — permute -> add -> permute
+# -> ... -> carry store -> ROOT — as one logical collective whose real
+# consumer is the next scan iteration.
+_CARRY_CHAIN_TOKENS = _MOVE_TOKENS | {"add", "collective-permute"}
+
+
+def _is_carry_chain(opcode: str, name: str) -> bool:
+    if _is_data_movement(opcode, name):
+        return True
+    if opcode in ("add", "collective-permute"):
+        return True
+    if opcode != "fusion":
+        return False
+    base = name.split(".")[0]
+    return all(tok in _CARRY_CHAIN_TOKENS for tok in base.split("_") if tok)
+
+
+def _is_compute_opcode(opcode: str, name: str = "") -> bool:
+    if _is_data_movement(opcode, name):
+        return False
+    base = opcode
+    for suffix in ("-start", "-done"):
+        if base.endswith(suffix):
+            base = base[: -len(suffix)]
+    return base not in COLLECTIVE_KINDS
+
+
+def overlap_fraction(hlo_text: str) -> Dict:
+    """Fraction of collectives with compute scheduled in their latency
+    window (start..done for async pairs; issue..first-real-consumer for
+    sync ops, loop-carried results counting as overlapped — see the module
+    docstring), plus the total compute ops found inside those windows.
+
+    Returns ``{"collectives", "overlapped", "overlap_fraction",
+    "compute_ops_in_windows"}``; a module with no collectives reports a
+    fraction of 0.0.
+    """
+    lines = hlo_text.splitlines()
+    ops = []                      # (line_idx, name, opcode)
+    uses: Dict[str, list] = {}    # operand name -> ascending use-line idxs
+    defs_by_line: Dict[int, tuple] = {}
+    for idx, line in enumerate(lines):
+        m = _ANY_OP_RE.match(line)
+        if m:
+            ops.append((idx, m.group("name"), m.group("opcode")))
+            defs_by_line[idx] = (m.group("name"), m.group("opcode"))
+        # operand references (past the "%name =" definition when present);
+        # names recur across computations, so keep every use line and pick
+        # the first one AFTER the issuing op below
+        for ref in _OPERAND_REF_RE.findall(line[m.end():] if m else line):
+            uses.setdefault(ref, []).append(idx)
+    compute_lines = sorted(i for i, nm, opc in ops
+                           if _is_compute_opcode(opc, nm))
+
+    def compute_in(lo: int, hi: int) -> int:
+        """Compute-op lines strictly between lines lo and hi."""
+        return max(0, bisect.bisect_left(compute_lines, hi)
+                   - bisect.bisect_right(compute_lines, lo))
+
+    def first_real_consumer(idx: int, name: str):
+        """(window_end, loop_carried) for the value defined at ``idx``.
+
+        Chases through pure data-movement consumers (the carry stores a
+        scan wraps around an in-flight collective result).  A value that
+        reaches a ROOT tuple through movement only is LOOP-CARRIED: its
+        real consumer is the next iteration's wait, so the whole remainder
+        of the body is its latency window — exactly the overlapped
+        backward scan's start/wait structure.  The chase also passes
+        through the ring's own chain (hop permutes + accumulate adds), so
+        a chained reduce-scatter reads as one logical collective.  Only a
+        FIRST consumer that is the ROOT (or a chain op leading to it)
+        counts as carried — a value whose first consumer is real compute
+        is NOT carried even if its raw value also lands in the ROOT tuple,
+        and a dead collective (no consumers) is not overlap evidence."""
+        hi = len(lines)
+        for _ in range(64):               # bounded chase
+            use_lines = uses.get(name, ())
+            j = bisect.bisect_right(use_lines, idx)
+            if j >= len(use_lines):
+                return len(lines), False  # dead value: no consumer at all
+            hi = use_lines[j]
+            if lines[hi].lstrip().startswith("ROOT"):
+                return hi, True           # feeds the carry directly
+            d = defs_by_line.get(hi)
+            if d is None or not _is_carry_chain(d[1], d[0]):
+                return hi, False
+            idx, name = hi, d[0]
+        return hi, False
+
+    total = overlapped = in_windows = 0
+    starts: Dict[str, int] = {}
+    for idx, name, opcode in ops:
+        base = opcode
+        is_start = base.endswith("-start")
+        is_done = base.endswith("-done")
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in COLLECTIVE_KINDS:
+            continue
+        if is_start:
+            starts[name] = idx
+            continue
+        if is_done:
+            m = _ANY_OP_RE.match(lines[idx])
+            ref = _OPERAND_REF_RE.search(lines[idx][m.end():] if m
+                                         else lines[idx])
+            lo = starts.pop(ref.group(1), None) if ref else None
+            if lo is None:
+                continue
+            hi = idx
+        else:
+            # sync collective: window runs to its first REAL consumer after
+            # the issue line (same-name values in other computations
+            # excluded; carry stores chased through).  Loop-carried results
+            # are consumed one iteration later, so they count as overlapped
+            # even when the body's tail holds no further compute.
+            lo = idx
+            hi, carried = first_real_consumer(idx, name)
+            if carried:
+                total += 1
+                n = compute_in(lo, hi)
+                in_windows += n
+                overlapped += 1
+                continue
+        total += 1
+        n = compute_in(lo, hi)
+        in_windows += n
+        overlapped += n > 0
+    return {
+        "collectives": total,
+        "overlapped": overlapped,
+        "overlap_fraction": (overlapped / total) if total else 0.0,
+        "compute_ops_in_windows": in_windows,
     }
 
 
@@ -162,10 +356,20 @@ def per_tick_attribution(hlo_text: str, num_ticks: int,
     schedule's modeled span); the result says how many collective — and
     specifically collective-permute, the stage-boundary traffic — bytes
     each tick of schedule time must carry.
+
+    Raises ``ValueError`` on malformed HLO (unpaired ``-start``/``-done``
+    ops): an orphaned start's bytes have no closing window and an orphaned
+    done's were never counted, so any per-tick split would mis-attribute.
     """
     if num_ticks < 1:
         raise ValueError(f"num_ticks must be >= 1, got {num_ticks}")
     stats = collective_stats(hlo_text, default_group_size)
+    if stats["unmatched_starts"] or stats["unmatched_dones"]:
+        raise ValueError(
+            f"malformed HLO: {stats['unmatched_starts']} async start op(s) "
+            f"without a done and {stats['unmatched_dones']} done op(s) "
+            f"without a start; refusing to attribute collective bytes "
+            f"across ticks")
     per_kind = {k: v / num_ticks for k, v in stats["by_kind_bytes"].items()}
     return {
         "num_ticks": int(num_ticks),
@@ -219,6 +423,7 @@ def analyze_compiled(compiled, n_devices: int = 1) -> Dict:
         "flops_per_device": float(cost.get("flops", 0.0)),
         "hbm_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
         "collectives": collective_stats(hlo),
+        "overlap": overlap_fraction(hlo),
         "memory_analysis": _memory_dict(compiled),
     }
 

@@ -13,6 +13,31 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def db_step(k, n_k: int, dmas):
+    """One step of the shared double-buffer protocol: start the k==0
+    copies, prefetch block k+1 into the other slot, wait on block k's, and
+    return the slot (k % 2) the caller should consume.  ``dmas`` is a
+    sequence of ``dma(slot, kk)`` constructors (one per streamed operand);
+    the copy started here at step k is the one waited at step k+1, giving
+    one grid step of DMA/compute overlap per operand."""
+    @pl.when(k == 0)
+    def _first():
+        for d in dmas:
+            d(0, 0).start()
+
+    @pl.when(k + 1 < n_k)
+    def _prefetch():
+        nxt = (k + 1) % 2
+        for d in dmas:
+            d(nxt, k + 1).start()
+
+    slot = k % 2
+    for d in dmas:
+        d(slot, k).wait()
+    return slot
 
 
 def kq(x, i_bits: int, f_bits: int):

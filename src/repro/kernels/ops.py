@@ -24,6 +24,17 @@ Three layers live here:
     Mosaic-compiled kernels on TPU, plus the ``dense_*`` helpers that the
     ``custom_vjp`` dense unit builds its forward/backward from (operand
     quantization with traced absmax scales on the int8 path).
+
+Each streaming kernel also has an explicit **double-buffered DMA** datapath
+(``double_buffer=``): operands stay in HBM and the grid body prefetches
+block k+1 into the second slot of a 2-deep VMEM scratch while the MXU
+consumes block k (bit-identical numerics; see fxp_matmul's docstring).
+``resolve_double_buffer`` picks the platform default — ON for compiled TPU
+kernels, OFF under CPU interpret mode.  The wrappers always call the
+autotuner with its 2-slot budget because BOTH fetch mechanisms hold two
+blocks resident (Pallas' implicit pipeline is itself 2-deep);
+``tune_blocks(double_buffer=False)`` models a hypothetical single-buffered
+fetch, not a wrapper path.
 """
 from __future__ import annotations
 
@@ -83,6 +94,19 @@ def current_backend() -> str:
     return _BACKEND.get()
 
 
+def resolve_double_buffer(double_buffer: Optional[bool] = None) -> bool:
+    """Resolve the explicit prefetch-DMA datapath knob.
+
+    ``None`` picks the platform default: ON for compiled TPU kernels (the
+    DMAs genuinely overlap the MXU), OFF on CPU where the interpreter
+    would only emulate the copies serially.  Deterministic per process, so
+    it is safe to consult inside jit-traced wrapper bodies.
+    """
+    if double_buffer is None:
+        return not _on_cpu()
+    return bool(double_buffer)
+
+
 # ---------------------------------------------------------------------------
 # Block autotuner
 # ---------------------------------------------------------------------------
@@ -100,8 +124,15 @@ def _candidates(dim: int) -> list:
 
 @functools.lru_cache(maxsize=None)
 def tune_blocks(m: int, n: int, k: int, itemsize: int = 4,
-                acc_itemsize: int = 4) -> Optional[tuple]:
+                acc_itemsize: int = 4,
+                double_buffer: bool = True) -> Optional[tuple]:
     """Pick (bm, bn, bk) for a [m,k]x[k,n]-shaped kernel grid.
+
+    ``double_buffer`` budgets TWO VMEM slots per streamed input block —
+    both for Pallas' implicit pipeline and for the explicit prefetch-DMA
+    datapath (``double_buffer=True`` on the kernels), which hold block k
+    and block k+1 resident simultaneously.  ``False`` models a
+    single-buffered fetch (no overlap) and admits ~2x larger tiles.
 
     Returns None when some dim has no aligned divisor >= 8 — callers fall
     back to the jnp reference path instead of degrading to 1-wide blocks.
@@ -109,12 +140,13 @@ def tune_blocks(m: int, n: int, k: int, itemsize: int = 4,
     cm, cn, ck = _candidates(m), _candidates(n), _candidates(k)
     if not (cm and cn and ck):
         return None
+    slots = 2 if double_buffer else 1
     best, best_key = None, None
     for bm in cm:
         for bn in cn:
             for bk in ck:
-                # double-buffered input blocks + resident output + accumulator
-                vmem = (2 * (bm * bk + bk * bn) * itemsize
+                # slotted input blocks + resident output + accumulator
+                vmem = (slots * (bm * bk + bk * bn) * itemsize
                         + bm * bn * (4 + acc_itemsize))
                 if vmem > VMEM_BUDGET_BYTES:
                     continue
@@ -127,16 +159,20 @@ def tune_blocks(m: int, n: int, k: int, itemsize: int = 4,
 
 
 def tune_fused(t: int, din: int, dout: int, itemsize: int = 4,
-               acc_itemsize: int = 4) -> Optional[int]:
+               acc_itemsize: int = 4,
+               double_buffer: bool = True) -> Optional[int]:
     """Token-block size for bp_fused_unit (W + dW accumulator stay resident);
-    None when the frame cannot fit VMEM or t has no aligned divisor."""
+    None when the frame cannot fit VMEM or t has no aligned divisor.
+    ``double_buffer`` budgets the second G/X/Z streaming slot."""
     ct = _candidates(t)
     if not ct or not _candidates(din) or not _candidates(dout):
         return None
+    slots = 2 if double_buffer else 1
     # W (f32) + dW accumulator + the cached q_w(W) scratch
     resident = din * dout * (4 + acc_itemsize + itemsize)
     for bt in ct:
-        stream = 2 * (bt * dout + 2 * bt * din) * itemsize + bt * din * 4
+        stream = (slots * (bt * dout + 2 * bt * din) * itemsize
+                  + slots * bt * din * 4)
         if resident + stream <= VMEM_BUDGET_BYTES:
             return bt
     return None
@@ -147,11 +183,13 @@ def tune_fused(t: int, din: int, dout: int, itemsize: int = 4,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "xa_bits", "w_bits", "out_bits", "act", "datapath"))
+    "xa_bits", "w_bits", "out_bits", "act", "datapath", "double_buffer"))
 def fxp_matmul_op(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
-                  out_bits=(4, 10), act="identity", datapath="emulate"):
+                  out_bits=(4, 10), act="identity", datapath="emulate",
+                  double_buffer=None):
     m, k = x.shape
     n = w.shape[1]
+    db = resolve_double_buffer(double_buffer)
     blocks = tune_blocks(m, n, k, itemsize=1 if datapath == "int8" else 4)
     if datapath == "int8":
         if blocks is None:
@@ -163,22 +201,25 @@ def fxp_matmul_op(x, w, *, xa_bits=(4, 10), w_bits=(2, 12),
         bm, bn, bk = blocks
         return fxp_matmul(qx, qw, out_bits=out_bits, act=act,
                           bm=bm, bn=bn, bk=bk, datapath="int8",
-                          scale=sx * sw, interpret=_on_cpu())
+                          scale=sx * sw, interpret=_on_cpu(),
+                          double_buffer=db)
     if blocks is None:
         return ref.fxp_matmul_ref(x, w, xa_bits=xa_bits, w_bits=w_bits,
                                   out_bits=out_bits, act=act)
     bm, bn, bk = blocks
     return fxp_matmul(x, w, xa_bits=xa_bits, w_bits=w_bits,
                       out_bits=out_bits, act=act,
-                      bm=bm, bn=bn, bk=bk, interpret=_on_cpu())
+                      bm=bm, bn=bn, bk=bk, interpret=_on_cpu(),
+                      double_buffer=db)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "g_bits", "act", "datapath", "g_in_bits", "w_bits"))
+    "g_bits", "act", "datapath", "g_in_bits", "w_bits", "double_buffer"))
 def bp_gstep_op(g, w, z, *, g_bits=(2, 12), act="relu", datapath="emulate",
-                g_in_bits=(2, 12), w_bits=(2, 12)):
+                g_in_bits=(2, 12), w_bits=(2, 12), double_buffer=None):
     t, dout = g.shape
     din = w.shape[0]
+    db = resolve_double_buffer(double_buffer)
     blocks = tune_blocks(t, din, dout, itemsize=1 if datapath == "int8" else 4)
     if datapath == "int8":
         if blocks is None:
@@ -189,12 +230,14 @@ def bp_gstep_op(g, w, z, *, g_bits=(2, 12), act="relu", datapath="emulate",
         bm, bn, bk = blocks
         return bp_gstep(qg, qw, z, g_bits=g_bits, act=act,
                         bm=bm, bn=bn, bk=bk, datapath="int8",
-                        scale=sg * sw, interpret=_on_cpu())
+                        scale=sg * sw, interpret=_on_cpu(),
+                        double_buffer=db)
     if blocks is None:
         return ref.bp_gstep_ref(g, w, z, g_bits=g_bits, act=act)
     bm, bn, bk = blocks
     return bp_gstep(g, w, z, g_bits=g_bits, act=act,
-                    bm=bm, bn=bn, bk=bk, interpret=_on_cpu())
+                    bm=bm, bn=bn, bk=bk, interpret=_on_cpu(),
+                    double_buffer=db)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -224,14 +267,15 @@ def sgd_dw_update_op(x, g, w, lr, *, w_bits=None, datapath="emulate",
 
 @functools.partial(jax.jit, static_argnames=(
     "g_bits", "w_bits", "w_out_bits", "act", "datapath", "g_in_bits",
-    "xa_bits"))
+    "xa_bits", "double_buffer"))
 def bp_fused_unit_op(g, w, x, z, lr, *, g_bits=(2, 12), w_bits=(2, 12),
                      w_out_bits=None, act="relu", datapath="emulate",
-                     g_in_bits=(2, 12), xa_bits=(4, 10)):
+                     g_in_bits=(2, 12), xa_bits=(4, 10), double_buffer=None):
     """One TDM frame (see bp_fused_unit); falls back to the sequential jnp
     oracle when the frame cannot be tiled/fit."""
     t, dout = g.shape
     din = w.shape[0]
+    db = resolve_double_buffer(double_buffer)
     bt = tune_fused(t, din, dout, itemsize=1 if datapath == "int8" else 4)
     if datapath == "int8":
         if bt is None:
@@ -243,14 +287,14 @@ def bp_fused_unit_op(g, w, x, z, lr, *, g_bits=(2, 12), w_bits=(2, 12),
         return bp_fused_unit(qg, w, qx, z, lr, g_bits=g_bits, w_bits=w_bits,
                              w_out_bits=w_out_bits, act=act, bt=bt,
                              datapath="int8", g_scale=sg, x_scale=sx,
-                             interpret=_on_cpu())
+                             interpret=_on_cpu(), double_buffer=db)
     if bt is None:
         return ref.bp_fused_unit_ref(g, w, x, z, lr, g_bits=g_bits,
                                      w_bits=w_bits, w_out_bits=w_out_bits,
                                      act=act)
     return bp_fused_unit(g, w, x, z, lr, g_bits=g_bits, w_bits=w_bits,
                          w_out_bits=w_out_bits, act=act, bt=bt,
-                         interpret=_on_cpu())
+                         interpret=_on_cpu(), double_buffer=db)
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +319,8 @@ def dense_fwd(x2, w, backend: str):
         bm, bn, bk = blocks
         return fxp_matmul(qx, qw, out_bits=None, act="identity",
                           bm=bm, bn=bn, bk=bk, datapath="int8",
-                          scale=sx * sw, interpret=_on_cpu())
+                          scale=sx * sw, interpret=_on_cpu(),
+                          double_buffer=resolve_double_buffer())
     blocks = tune_blocks(m, n, k)
     if blocks is None:
         return jnp.dot(x2.astype(jnp.float32), w.astype(jnp.float32),
@@ -284,7 +329,8 @@ def dense_fwd(x2, w, backend: str):
     return fxp_matmul(x2.astype(jnp.float32), w.astype(jnp.float32),
                       xa_bits=None, w_bits=None, out_bits=None,
                       act="identity", bm=bm, bn=bn, bk=bk,
-                      interpret=_on_cpu())
+                      interpret=_on_cpu(),
+                      double_buffer=resolve_double_buffer())
 
 
 def dense_bwd_dx(dz, w, backend: str):
@@ -302,7 +348,8 @@ def dense_bwd_dx(dz, w, backend: str):
         bm, bn, bk = blocks
         return bp_gstep(qg, qw, None, g_bits=None, act="identity",
                         bm=bm, bn=bn, bk=bk, datapath="int8",
-                        scale=sg * sw, interpret=_on_cpu())
+                        scale=sg * sw, interpret=_on_cpu(),
+                        double_buffer=resolve_double_buffer())
     blocks = tune_blocks(m, k, n)
     if blocks is None:
         return jnp.dot(dz, w.astype(jnp.float32).T,
@@ -310,7 +357,8 @@ def dense_bwd_dx(dz, w, backend: str):
     bm, bn, bk = blocks
     return bp_gstep(dz, w.astype(jnp.float32), None, g_bits=None,
                     act="identity", bm=bm, bn=bn, bk=bk,
-                    interpret=_on_cpu())
+                    interpret=_on_cpu(),
+                    double_buffer=resolve_double_buffer())
 
 
 def dense_bwd_dw(x2, dz, backend: str):

@@ -58,8 +58,13 @@ def model_flops_global(cfg: ModelConfig, cell) -> float:
     return 2.0 * n * cell.global_batch
 
 
-def build_cell(cfg: ModelConfig, cell, mesh):
-    """Returns (fn, arg_specs, in_shardings) for the cell's step kind."""
+def build_cell(cfg: ModelConfig, cell, mesh, pipe=None):
+    """Returns (fn, arg_specs, in_shardings) for the cell's step kind.
+
+    ``pipe`` = (schedule_name, stages, microbatches) builds the TRAIN step
+    with the stage-sharded pipeline execution path (dist.pipeline); the
+    cost pass stays pipeline-free (reduced depths need not divide).
+    """
     specs = input_specs(cfg, cell.name)
     p_specs = param_specs(cfg)
     p_sh = to_named(param_pspecs(cfg, p_specs, mesh), mesh)
@@ -67,7 +72,11 @@ def build_cell(cfg: ModelConfig, cell, mesh):
     if cell.kind == "train":
         ocfg = OptimizerConfig(kind="sgd")
         policy = QuantPolicy(grad_scale=128.0)  # paper-faithful: quant ON
-        step = make_train_step(cfg, policy, ocfg, engine="taxonn")
+        pipe_kw = {}
+        if pipe is not None:
+            pipe_kw = dict(pipeline_schedule=pipe[0], pipeline_stages=pipe[1],
+                           num_microbatches=pipe[2])
+        step = make_train_step(cfg, policy, ocfg, engine="taxonn", **pipe_kw)
         opt_specs = jax.eval_shape(lambda p: init_train_state(p, ocfg), p_specs)
         opt_sh = to_named(opt_pspecs(
             cfg, opt_specs, param_pspecs(cfg, p_specs, mesh), mesh), mesh)
@@ -174,7 +183,7 @@ def cost_pass(cfg: ModelConfig, cell, mesh, rules) -> dict:
 
 def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
              force: bool = False, verbose: bool = True,
-             opts: tuple = ()) -> dict:
+             opts: tuple = (), pipe=None) -> dict:
     mesh_tag = "multipod_2x16x16" if multi_pod else "pod_16x16"
     opt_tag = ("__" + "-".join(sorted(opts))) if opts else ""
     rec_path = out_dir / f"{arch}__{cell_name}__{mesh_tag}{opt_tag}.json"
@@ -212,7 +221,8 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
     try:
         with perf_options_ctx(opts), jax.set_mesh(mesh), \
                 activation_sharding_ctx(rules):
-            fn, args, shardings, donate = build_cell(cfg, cell, mesh)
+            fn, args, shardings, donate = build_cell(cfg, cell, mesh,
+                                                     pipe=pipe)
             lowered = jax.jit(fn, in_shardings=shardings,
                               donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
@@ -227,8 +237,13 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
             "compile_s": round(t_compile, 1),
             "model_flops_global": mf_global,
             "model_flops_per_device": mf_dev,
+            "overlap_fraction": analysis["overlap"]["overlap_fraction"],
             "scanned_artifact": analysis,   # memory truth; costs count scan bodies once
         })
+        if pipe is not None and cell.kind == "train":
+            from repro.dist.pipeline import get_schedule
+            record["pipe_bubble"] = get_schedule(pipe[0]).bubble_fraction(
+                pipe[1], pipe[2])
         # --- exact cost pass (unrolled reduced-depth extrapolation) -------
         t1 = time.time()
         with perf_options_ctx(opts):
@@ -272,8 +287,16 @@ def main():
     ap.add_argument("--opts", default="",
                     help="comma-separated perf options (seq_parallel, "
                          "pad_heads, moe_rowcombine) — see §Perf")
+    ap.add_argument("--pipeline-schedule", default="none",
+                    choices=["none", "gpipe", "1f1b", "interleaved"],
+                    help="build TRAIN cells with stage-sharded pipeline "
+                         "execution (records pipe_bubble)")
+    ap.add_argument("--pipe-stages", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=8)
     args = ap.parse_args()
     opts = tuple(o for o in args.opts.split(",") if o)
+    pipe = (None if args.pipeline_schedule == "none" else
+            (args.pipeline_schedule, args.pipe_stages, args.microbatches))
 
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -289,7 +312,7 @@ def main():
         for cell in cells:
             for multi in meshes:
                 rec = run_cell(arch, cell, multi, out_dir, force=args.force,
-                               opts=opts)
+                               opts=opts, pipe=pipe)
                 s = rec["status"]
                 n_ok += s == "ok"
                 n_skip += s == "skipped"

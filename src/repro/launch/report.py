@@ -27,30 +27,45 @@ def load(out_dir):
 CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
+def _frac(v) -> str:
+    return "—" if v is None else f"{v:.2f}"
+
+
 def render_dryrun_table(recs) -> str:
+    """One row per dry-run record.  ``overlap`` is
+    hlo_analysis.overlap_fraction of the scanned artifact (compute
+    scheduled inside collective latency windows) and ``pipe bubble`` the
+    modeled schedule bubble when the cell was built with stage-sharded
+    pipeline execution — both surfaced here, not only in train-step
+    metrics."""
     lines = [
-        "| arch | cell | mesh | status | compile | args/dev | temp/dev | collectives (scanned artifact) |",
-        "|---|---|---|---|---|---|---|---|",
+        "| arch | cell | mesh | status | compile | args/dev | temp/dev | overlap | pipe bubble | collectives (scanned artifact) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     def key(r):
         return (r["arch"], CELL_ORDER.index(r["cell"]), r["mesh"])
     for r in sorted(recs, key=key):
         if r["status"] == "skipped":
             lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
-                         f"skip (by design) | — | — | — | — |")
+                         f"skip (by design) | — | — | — | — | — | — |")
             continue
         if r["status"] == "error":
             lines.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
-                         f"ERROR | — | — | — | {r['error'][:60]} |")
+                         f"ERROR | — | — | — | — | — | {r['error'][:60]} |")
             continue
         ma = r["scanned_artifact"]["memory_analysis"]
         coll = r["scanned_artifact"]["collectives"]["counts"]
         cstr = " ".join(f"{k}:{v}" for k, v in sorted(coll.items())) or "none"
+        ov = r.get("overlap_fraction")
+        if ov is None:
+            ov = r.get("scanned_artifact", {}).get("overlap", {}).get(
+                "overlap_fraction")
         lines.append(
             f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok | "
             f"{r['compile_s']:.0f}s | "
             f"{fmt_bytes(ma.get('argument_size_in_bytes', 0))} | "
-            f"{fmt_bytes(ma.get('temp_size_in_bytes', 0))} | {cstr} |")
+            f"{fmt_bytes(ma.get('temp_size_in_bytes', 0))} | "
+            f"{_frac(ov)} | {_frac(r.get('pipe_bubble'))} | {cstr} |")
     return "\n".join(lines)
 
 

@@ -84,6 +84,10 @@ def main(argv=None):
     ap.add_argument("--compress-dw", action="store_true",
                     help="route per-layer dW through the int8 block-scaled "
                          "wire format inside the backward scan")
+    ap.add_argument("--overlap", default="off", choices=["off", "on"],
+                    help="software-pipeline each layer's dW all-reduce one "
+                         "backward-scan step deep (ring ppermute chunks "
+                         "overlap the next layer's G-step compute)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-scale reduced twin of the arch")
     ap.add_argument("--ckpt-dir", default=None)
@@ -96,10 +100,10 @@ def main(argv=None):
                     help="pipe-axis size (0 = no pipe axis in the mesh)")
     ap.add_argument("--pipeline-schedule", default="none",
                     choices=["none", "gpipe", "1f1b", "interleaved"],
-                    help="declare the pipe-axis pipeline schedule (validated"
-                         " + reported in metrics; the stack itself still "
-                         "executes data-parallel — see repro.dist.pipeline "
-                         "and the ROADMAP execution-wiring item)")
+                    help="pipe-axis pipeline schedule; with stages > 1 the "
+                         "engine's blocks stack EXECUTES stage-sharded "
+                         "through repro.dist.pipeline (layers and batch "
+                         "must divide into stages and microbatches)")
     ap.add_argument("--virtual-stages", type=int, default=2,
                     help="virtual stages per pipe device (interleaved "
                          "schedule only)")
@@ -127,15 +131,17 @@ def main(argv=None):
             num_virtual=(args.virtual_stages
                          if args.pipeline_schedule == "interleaved" else None))
         n_stages = pipe_axis_size(mesh) * pipe_sched.num_virtual
-        print(f"[train] pipeline {pipe_sched.name} (cost model only; stack "
-              f"execution stays data-parallel): "
+        mode = ("stage-sharded execution" if n_stages > 1
+                else "cost model only (1 stage)")
+        print(f"[train] pipeline {pipe_sched.name} ({mode}): "
               f"{pipe_sched.summary(n_stages, args.microbatches)}", flush=True)
 
     ocfg = OptimizerConfig(kind=args.optimizer, grad_clip=1.0)
     policy = (QuantPolicy(grad_scale=64.0) if args.quantize
               else QuantPolicy.off())
     policy = dataclasses.replace(policy, kernel_backend=args.kernel_backend,
-                                 compress_dw=args.compress_dw)
+                                 compress_dw=args.compress_dw,
+                                 overlap=args.overlap)
     bits = default_bits(cfg, enabled=args.quantize)
     sched = cosine_schedule(args.lr, warmup=max(10, args.steps // 20),
                             total=args.steps)

@@ -39,3 +39,13 @@ def kernel_backend() -> str:
     backend = os.environ.get("REPRO_KERNEL_BACKEND", "off")
     assert backend in ("off", "emulate", "int8"), backend
     return backend
+
+
+@pytest.fixture(scope="session")
+def overlap() -> str:
+    """The backward-scan overlap mode selected by the CI matrix leg
+    (default "off"; the 4-device jobs add overlap="on" legs so the
+    software-pipelined dW reduce runs against a real device group)."""
+    mode = os.environ.get("REPRO_OVERLAP", "off")
+    assert mode in ("off", "on"), mode
+    return mode

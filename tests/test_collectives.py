@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.collectives import compressed_psum_tree, dense_psum_tree
+from repro.dist.collectives import (compressed_psum, compressed_psum_tree,
+                                    dense_psum_tree)
 from repro.quant.compression import BLOCK, compress_int8, decompress_int8
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -85,6 +86,22 @@ assert err.max() <= tol + 1e-6, (err.max(), tol)
 print("PSUM2 OK")
 """)
     assert "PSUM2 OK" in out
+
+
+def test_compressed_psum_no_mesh_honors_num_replicas():
+    """The codec-roundtrip path must simulate the n-replica sum of a
+    replicated value (n * decompress(compress(x))), matching what the mesh
+    path returns for the same replicated input."""
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((40, 9)),
+                    jnp.float32)
+    one = compressed_psum(x, ())
+    for n in (None, 1):
+        np.testing.assert_array_equal(
+            np.asarray(compressed_psum(x, (), num_replicas=n)),
+            np.asarray(one))
+    four = compressed_psum(x, (), num_replicas=4)
+    np.testing.assert_allclose(np.asarray(four), 4.0 * np.asarray(one),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_dense_psum_inside_jit_grad_path():

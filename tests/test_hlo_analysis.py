@@ -8,8 +8,8 @@ import textwrap
 
 import pytest
 
-from repro.dist.hlo_analysis import (collective_stats, per_tick_attribution,
-                                     roofline_terms)
+from repro.dist.hlo_analysis import (collective_stats, overlap_fraction,
+                                     per_tick_attribution, roofline_terms)
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -113,6 +113,105 @@ def test_per_tick_attribution_text():
         out["collectives"]["moved_bytes_per_device"] / 8)
     with pytest.raises(ValueError):
         per_tick_attribution(SYNC_HLO, num_ticks=0)
+
+
+NO_COLLECTIVES_HLO = """
+ENTRY %main {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %mul = f32[64,64]{1,0} multiply(f32[64,64]{1,0} %p0, f32[64,64]{1,0} %p0)
+  ROOT %t = (f32[64,64]{1,0}) tuple(%mul)
+}
+"""
+
+ORPHAN_DONE_HLO = """
+ENTRY %main {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %ard = f32[8,8]{1,0} all-reduce-done((f32[8,8]{1,0}, f32[8,8]{1,0}) %ghost)
+  ROOT %t = (f32[8,8]{1,0}) tuple(%ard)
+}
+"""
+
+
+def test_per_tick_attribution_zero_collectives():
+    """A module with no collectives attributes zero bytes everywhere —
+    not an error, just an empty census."""
+    out = per_tick_attribution(NO_COLLECTIVES_HLO, num_ticks=4)
+    assert out["moved_bytes_per_tick"] == 0.0
+    assert out["permute_bytes_per_tick"] == 0.0
+    assert out["bytes_per_tick_by_kind"] == {}
+    assert out["collectives"]["counts"] == {}
+
+
+def test_per_tick_attribution_rejects_unpaired_start():
+    """ASYNC_HLO carries an orphaned all-gather-start: its bytes have no
+    closing window, so per-tick attribution must refuse, not guess."""
+    assert collective_stats(ASYNC_HLO)["unmatched_starts"] == 1
+    with pytest.raises(ValueError, match="without a done"):
+        per_tick_attribution(ASYNC_HLO, num_ticks=4)
+
+
+def test_per_tick_attribution_rejects_orphan_done():
+    stats = collective_stats(ORPHAN_DONE_HLO)
+    assert stats["unmatched_dones"] == 1
+    assert stats["moved_bytes_per_device"] == 0.0  # never counted
+    with pytest.raises(ValueError, match="without a start"):
+        per_tick_attribution(ORPHAN_DONE_HLO, num_ticks=4)
+
+
+# ---------------------------------------------------------------------------
+# overlap_fraction: compute scheduled inside collective latency windows
+# ---------------------------------------------------------------------------
+
+def test_overlap_fraction_async_pair_with_compute():
+    ov = overlap_fraction(ASYNC_HLO)
+    # the all-reduce pair brackets %mul (compute); the permute pair is
+    # issued right after %mul with nothing between start and done; the
+    # orphaned start never closes a window
+    assert ov["collectives"] == 2
+    assert ov["overlapped"] == 1
+    assert ov["overlap_fraction"] == pytest.approx(0.5)
+    assert ov["compute_ops_in_windows"] == 1
+
+
+def test_overlap_fraction_sync_window_to_first_consumer():
+    # %ar's result reaches ROOT through its carry chain (the %add2
+    # accumulate), so it is loop-carried: window extends to the ROOT and
+    # holds both %mul and %add2
+    hlo = """
+ENTRY %main {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %ar = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %p0), replica_groups={{0,1}}, to_apply=%add
+  %mul = f32[8,8]{1,0} multiply(f32[8,8]{1,0} %p0, f32[8,8]{1,0} %p0)
+  %add2 = f32[8,8]{1,0} add(f32[8,8]{1,0} %ar, f32[8,8]{1,0} %mul)
+  ROOT %t = (f32[8,8]{1,0}) tuple(%add2)
+}
+"""
+    ov = overlap_fraction(hlo)
+    assert ov["collectives"] == 1
+    assert ov["overlapped"] == 1
+    assert ov["compute_ops_in_windows"] == 2
+
+    # a sync collective consumed by NON-chain compute (a multiply) with
+    # nothing scheduled between issue and consumer is NOT overlapped
+    hlo2 = """
+ENTRY %main {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %ar = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %p0), replica_groups={{0,1}}, to_apply=%add
+  %use = f32[8,8]{1,0} multiply(f32[8,8]{1,0} %ar, f32[8,8]{1,0} %p0)
+  %late = f32[8,8]{1,0} multiply(f32[8,8]{1,0} %use, f32[8,8]{1,0} %use)
+  ROOT %t = (f32[8,8]{1,0}) tuple(%late)
+}
+"""
+    ov2 = overlap_fraction(hlo2)
+    assert ov2["collectives"] == 1
+    assert ov2["overlapped"] == 0
+    assert ov2["compute_ops_in_windows"] == 0
+
+
+def test_overlap_fraction_no_collectives_is_zero():
+    ov = overlap_fraction(NO_COLLECTIVES_HLO)
+    assert ov == {"collectives": 0, "overlapped": 0,
+                  "overlap_fraction": 0.0, "compute_ops_in_windows": 0}
 
 
 def test_roofline_terms_dominant():

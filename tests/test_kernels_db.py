@@ -1,0 +1,175 @@
+"""Double-buffered DMA kernel datapath: bit-exactness vs the implicit
+blocked-fetch path, autotuner VMEM budgeting, and the resolve knob.
+
+The double-buffered variants compute the SAME blocks in the SAME order
+(only the fetch mechanism changes: explicit 2-slot prefetch DMAs instead of
+Pallas' implicit pipeline), so outputs must match bit-for-bit — any
+difference means a race between the prefetch and the consuming MAC.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bp_fused_unit import bp_fused_unit
+from repro.kernels.bp_gstep import bp_gstep
+from repro.kernels.fxp_matmul import fxp_matmul
+from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,
+                               resolve_double_buffer, tune_blocks, tune_fused,
+                               VMEM_BUDGET_BYTES)
+from repro.quant.int8 import quantize_int8_auto
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def rand(key, shape, scale=1.0):
+    return (jax.random.normal(jax.random.key(key), shape) * scale
+            ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the single-buffered kernels (emulate + int8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (32, 48, 24, 16, 8, 8),     # multi-block k (the prefetch loop runs)
+    (16, 8, 16, 8, 8, 8),       # single k block (prefetch guard only)
+    (64, 32, 32, 16, 16, 16),
+])
+def test_fxp_matmul_double_buffer_bit_exact(m, k, n, bm, bk, bn):
+    x, w = rand(1, (m, k)), rand(2, (k, n))
+    kw = dict(xa_bits=(4, 10), w_bits=(2, 12), out_bits=(4, 10), act="relu",
+              bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(fxp_matmul(x, w, **kw)),
+        np.asarray(fxp_matmul(x, w, double_buffer=True, **kw)))
+
+
+def test_fxp_matmul_double_buffer_int8_bit_exact():
+    x, w = rand(3, (32, 48), 2.0), rand(4, (48, 24), 0.5)
+    qx, sx = quantize_int8_auto(x, (4, 10))
+    qw, sw = quantize_int8_auto(w, (2, 12))
+    kw = dict(out_bits=(4, 10), act="relu", bm=16, bn=8, bk=8,
+              interpret=True, datapath="int8", scale=sx * sw)
+    np.testing.assert_array_equal(
+        np.asarray(fxp_matmul(qx, qw, **kw)),
+        np.asarray(fxp_matmul(qx, qw, double_buffer=True, **kw)))
+
+
+@pytest.mark.parametrize("with_z", [True, False])
+def test_bp_gstep_double_buffer_bit_exact(with_z):
+    g, w = rand(1, (32, 24)), rand(2, (16, 24))
+    z = rand(3, (32, 16)) if with_z else None
+    kw = dict(g_bits=(2, 12), act="relu" if with_z else "identity",
+              bm=16, bn=8, bk=8, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(bp_gstep(g, w, z, **kw)),
+        np.asarray(bp_gstep(g, w, z, double_buffer=True, **kw)))
+
+
+def test_bp_gstep_double_buffer_bf16_bit_exact():
+    """bf16 operands must hit the MXU in bf16 on BOTH fetch paths — the
+    DMA slots keep the input dtype, no silent f32 promotion."""
+    g = rand(1, (32, 24)).astype(jnp.bfloat16)
+    w = rand(2, (16, 24)).astype(jnp.bfloat16)
+    z = rand(3, (32, 16))
+    kw = dict(g_bits=(2, 12), act="relu", bm=16, bn=8, bk=8, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(bp_gstep(g, w, z, **kw)),
+        np.asarray(bp_gstep(g, w, z, double_buffer=True, **kw)))
+
+
+def test_bp_gstep_double_buffer_int8_bit_exact():
+    g, w, z = rand(1, (32, 24)), rand(2, (16, 24)), rand(3, (32, 16))
+    qg, sg = quantize_int8_auto(g, (2, 12))
+    qw, sw = quantize_int8_auto(w, (2, 12))
+    kw = dict(g_bits=(2, 12), act="relu", bm=16, bn=8, bk=8, interpret=True,
+              datapath="int8", scale=sg * sw)
+    np.testing.assert_array_equal(
+        np.asarray(bp_gstep(qg, qw, z, **kw)),
+        np.asarray(bp_gstep(qg, qw, z, double_buffer=True, **kw)))
+
+
+@pytest.mark.parametrize("bt", [8, 32])
+def test_bp_fused_unit_double_buffer_bit_exact(bt):
+    T, Din, Dout = 32, 16, 24
+    g, w = rand(1, (T, Dout)), rand(2, (Din, Dout))
+    x, z = rand(3, (T, Din)), rand(4, (T, Din))
+    kw = dict(g_bits=(2, 12), w_bits=(2, 12), w_out_bits=(2, 12), act="relu",
+              bt=bt, interpret=True)
+    a = bp_fused_unit(g, w, x, z, 0.05, **kw)
+    b = bp_fused_unit(g, w, x, z, 0.05, double_buffer=True, **kw)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_bp_fused_unit_double_buffer_int8_bit_exact():
+    T, Din, Dout = 32, 16, 24
+    g, w = rand(1, (T, Dout)), rand(2, (Din, Dout))
+    x, z = rand(3, (T, Din)), rand(4, (T, Din))
+    qg, sg = quantize_int8_auto(g, (2, 12))
+    qx, sx = quantize_int8_auto(x, (4, 10))
+    kw = dict(g_bits=(2, 12), w_bits=(2, 12), w_out_bits=(2, 12), act="relu",
+              bt=8, interpret=True, datapath="int8", g_scale=sg, x_scale=sx)
+    a = bp_fused_unit(qg, w, qx, z, 0.05, **kw)
+    b = bp_fused_unit(qg, w, qx, z, 0.05, double_buffer=True, **kw)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# the op wrappers accept the knob (jit-static)
+# ---------------------------------------------------------------------------
+
+def test_op_wrappers_double_buffer_knob():
+    x, w = rand(1, (32, 48)), rand(2, (48, 24))
+    base = fxp_matmul_op(x, w, double_buffer=False)
+    np.testing.assert_array_equal(
+        np.asarray(base), np.asarray(fxp_matmul_op(x, w, double_buffer=True)))
+    g, z = rand(3, (32, 24)), rand(4, (32, 16))
+    w2 = rand(5, (16, 24))
+    np.testing.assert_array_equal(
+        np.asarray(bp_gstep_op(g, w2, z, double_buffer=False)),
+        np.asarray(bp_gstep_op(g, w2, z, double_buffer=True)))
+    xf = rand(6, (32, 16))
+    a = bp_fused_unit_op(g, w2, xf, z, 0.05, double_buffer=False)
+    b = bp_fused_unit_op(g, w2, xf, z, 0.05, double_buffer=True)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_resolve_double_buffer_platform_default():
+    assert resolve_double_buffer(None) is False   # this suite runs on CPU
+    assert resolve_double_buffer(True) is True
+    assert resolve_double_buffer(False) is False
+
+
+# ---------------------------------------------------------------------------
+# autotuner budgets the second slot
+# ---------------------------------------------------------------------------
+
+def test_tune_blocks_double_buffer_budget():
+    # a shape where the 2-slot budget forces smaller tiles than 1-slot
+    m = n = k = 2048
+    db = tune_blocks(m, n, k, itemsize=4, double_buffer=True)
+    nb = tune_blocks(m, n, k, itemsize=4, double_buffer=False)
+    assert db is not None and nb is not None
+    bm, bn, bk = db
+
+    def vmem(blocks, slots):
+        bm, bn, bk = blocks
+        return slots * (bm * bk + bk * bn) * 4 + bm * bn * 8
+
+    assert vmem(db, 2) <= VMEM_BUDGET_BYTES
+    assert vmem(nb, 1) <= VMEM_BUDGET_BYTES
+    # the single-buffered choice admits at least as much tile volume
+    assert nb[0] * nb[1] * nb[2] >= bm * bn * bk
+
+
+def test_tune_fused_double_buffer_budget():
+    # double-buffering the G/X/Z streams can only shrink the token block
+    t, din, dout = 4096, 512, 512
+    bt_db = tune_fused(t, din, dout, double_buffer=True)
+    bt_nb = tune_fused(t, din, dout, double_buffer=False)
+    assert bt_db is not None and bt_nb is not None
+    assert bt_nb >= bt_db

@@ -1,0 +1,354 @@
+"""Communication-overlapped backward scan + bucketed ring collectives.
+
+Covers dist.async_collectives (ring == psum on a real device group, the
+AsyncHandle pytree contract), the overlapped engine scan (bit-exact on one
+device where the handle is the identity; <= 1e-5 vs the blocking psum on a
+4-device mesh, dense AND compressed transport), the CI matrix leg fixture,
+and the check_regression missing-baseline satellite.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.dist.async_collectives import (AsyncHandle, all_reduce_start,
+                                          all_reduce_wait, group_size,
+                                          tree_all_reduce_start,
+                                          tree_all_reduce_wait)
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig
+from test_models import make_batch, tiny
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 4, timeout=600):
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT/'src'}:{ROOT/'tests'}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=ROOT,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# the AsyncHandle / ring primitives
+# ---------------------------------------------------------------------------
+
+def test_identity_handle_bit_exact():
+    """No axes (or a group of one) => wait(start(x)) is x bitwise on the
+    dense path, and exactly compressed_psum's codec round-trip (times the
+    simulated replica count) on the compressed path."""
+    from repro.dist.collectives import compressed_psum
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((13, 7)),
+                    jnp.float32)
+    for kwargs in ({}, {"num_replicas": 1}):
+        h = all_reduce_start(x, (), **kwargs)
+        np.testing.assert_array_equal(np.asarray(all_reduce_wait(h)),
+                                      np.asarray(x))
+    for n in (None, 4):
+        h = all_reduce_start(x, (), compressed=True, num_replicas=n)
+        np.testing.assert_array_equal(
+            np.asarray(all_reduce_wait(h)),
+            np.asarray(compressed_psum(x, (), num_replicas=n)))
+
+
+def test_async_handle_is_scan_carry_safe():
+    """Handles must survive pytree flatten/unflatten (the scan carry) with
+    their in-flight arrays and static metadata intact."""
+    x = jnp.arange(24.0, dtype=jnp.float32).reshape(6, 4)
+    h = all_reduce_start(x, ())
+    leaves, treedef = jax.tree.flatten(h)
+    h2 = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(h2, AsyncHandle)
+    assert h2.kind == h.kind and h2.shape == h.shape
+    np.testing.assert_array_equal(np.asarray(all_reduce_wait(h2)),
+                                  np.asarray(x))
+    # and inside an actual scan carry
+    def body(carry, xs):
+        new = all_reduce_start(xs * 2.0, ())
+        return new, all_reduce_wait(carry)
+    init = all_reduce_start(jnp.zeros((4,)), ())
+    last, ys = jax.lax.scan(body, init, jnp.ones((3, 4)))
+    np.testing.assert_array_equal(np.asarray(all_reduce_wait(last)),
+                                  2.0 * np.ones(4))
+
+
+def test_tree_start_wait_roundtrip():
+    tree = {"a": jnp.ones((4, 4)), "b": {"c": jnp.arange(5.0)}}
+    out = tree_all_reduce_wait(tree_all_reduce_start(tree, ()))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_group_size_resolution():
+    assert group_size((), None) == 1
+    assert group_size(("data",), 8) == 8          # explicit override wins
+    with pytest.raises(ValueError, match="pass num_replicas"):
+        group_size(("nonexistent-axis",), None)
+
+
+def test_ring_matches_psum_on_device_group():
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.async_collectives import ring_all_reduce
+
+    mesh = jax.make_mesh((4,), ("data",))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((13, 7)),
+                    jnp.float32)
+
+    def run(fn):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(),
+                                     out_specs=P(), check_vma=False))(x)
+
+    def contrib(v):
+        return v * (jax.lax.axis_index("data") + 1.0)
+
+    ref = np.asarray(run(lambda v: jax.lax.psum(contrib(v), "data")))
+    for kwargs in ({}, {"num_buckets": 3}):
+        got = np.asarray(run(lambda v, kw=kwargs: ring_all_reduce(
+            contrib(v), ("data",), num_replicas=4, **kw)))
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-5)
+    # compressed circulate: error bounded by one codec half-step/replica
+    comp = np.asarray(run(lambda v: ring_all_reduce(
+        contrib(v), ("data",), num_replicas=4, compressed=True)))
+    tol = 10 * np.abs(ref).max() / 127.0
+    assert np.abs(comp - ref).max() <= tol
+    print("RING OK")
+    """)
+    assert "RING OK" in out
+
+
+# ---------------------------------------------------------------------------
+# the overlapped backward scan
+# ---------------------------------------------------------------------------
+
+def _step_pair(cfg, pol_kwargs, ocfg_kind="momentum"):
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, t=32)
+    ocfg = OptimizerConfig(kind=ocfg_kind)
+    bits = default_bits(cfg, enabled=pol_kwargs.pop("bits_on", True))
+    hyper = Hyper(lr=jnp.float32(0.05), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    outs = {}
+    for overlap in ("off", "on"):
+        pol = QuantPolicy(**pol_kwargs, overlap=overlap)
+        step = jax.jit(make_train_step(cfg, pol, ocfg))
+        outs[overlap] = step(params, state, batch, hyper, bits)
+    return outs
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid", "encdec"])
+def test_overlap_single_device_bit_exact(family):
+    """With no dw_psum_axes the handle is the identity, so the overlapped
+    scan is a pure schedule change: params, opt state and metrics must be
+    BITWISE identical to the blocking scan."""
+    outs = _step_pair(tiny(family),
+                      dict(grad_scale=16.0, quantize_updates=True))
+    p0, s0, m0 = outs["off"]
+    p1, s1, m1 = outs["on"]
+    assert float(m0["loss"]) == float(m1["loss"])
+    for a, b in zip(jax.tree.leaves((p0, s0)), jax.tree.leaves((p1, s1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m0["grad_norm"]) == pytest.approx(float(m1["grad_norm"]),
+                                                   abs=1e-5)
+
+
+def test_overlap_single_device_bit_exact_compressed():
+    """compress_dw with no mesh axes is the codec round-trip; the
+    overlapped scan's identity handle must apply the SAME round-trip, not
+    silently skip it."""
+    outs = _step_pair(tiny("dense"),
+                      dict(quantize_weights=False, quantize_acts=False,
+                           quantize_grads=False, kernel_backend="off",
+                           compress_dw=True, bits_on=False),
+                      ocfg_kind="sgd")
+    p0, _, m0 = outs["off"]
+    p1, _, m1 = outs["on"]
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # grad_norm sums per-layer gsq in pipeline order (drain term last) —
+    # float reassociation only, params above are the bitwise check
+    assert float(m0["grad_norm"]) == pytest.approx(float(m1["grad_norm"]),
+                                                   rel=1e-6)
+
+
+def test_overlap_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="overlap"):
+        make_train_step(tiny("dense"), QuantPolicy.off(), OptimizerConfig(),
+                        overlap="sometimes")
+
+
+def test_overlap_matrix_leg_trains(overlap):
+    """The CI-matrix leg's overlap mode (REPRO_OVERLAP via the conftest
+    fixture) must run the train hot path end-to-end."""
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    ocfg = OptimizerConfig()
+    step = jax.jit(make_train_step(cfg, QuantPolicy.off(), ocfg,
+                                   overlap=overlap))
+    _, _, m = step(params, init_train_state(params, ocfg),
+                   make_batch(cfg, t=32),
+                   Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
+                   default_bits(cfg, enabled=False))
+    assert np.isfinite(float(m["loss"])), overlap
+
+
+def test_overlap_multi_device_matches_blocking():
+    """On a 4-device mesh the overlapped ring reduce must agree with the
+    blocking in-scan psum: forward bit-exact, updated params <= 1e-5 (the
+    ring reassociates the 4-replica sum), dense AND compressed."""
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=32)
+    ocfg = OptimizerConfig()
+    bits = default_bits(cfg, enabled=False)
+    hyper = Hyper(lr=jnp.float32(0.01), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def run(overlap, compress):
+        pol = QuantPolicy(quantize_weights=False, quantize_acts=False,
+                          quantize_grads=False, kernel_backend="off",
+                          compress_dw=compress, dw_psum_axes=("data",),
+                          dw_num_replicas=4, overlap=overlap)
+        step = make_train_step(cfg, pol, ocfg)
+        f = jax.shard_map(lambda p, s, b: step(p, s, b, hyper, bits),
+                          mesh=mesh, in_specs=(P(), P(), P("data")),
+                          out_specs=(P(), P(), P()), check_vma=False)
+        return jax.jit(f)(params, state, batch)
+
+    for compress in (False, True):
+        p_off, _, m_off = run("off", compress)
+        p_on, _, m_on = run("on", compress)
+        assert float(m_off["loss"]) == float(m_on["loss"])
+        worst = max(float(jnp.abs(a - b).max()) for a, b in
+                    zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)))
+        assert worst < 1e-5, (compress, worst)
+        print(f"compress={compress} worst={worst:.2e} OK")
+    print("OVERLAP4 OK")
+    """)
+    assert "OVERLAP4 OK" in out
+
+
+def test_overlap_hlo_has_compute_in_collective_windows():
+    """The compiled overlapped step must show compute scheduled inside
+    collective latency windows (the cross-scan-step handles) — the
+    overlap_fraction metric the benchmark gates on."""
+    out = run_py("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.dist.hlo_analysis import overlap_fraction
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=32)
+    ocfg = OptimizerConfig()
+    bits = default_bits(cfg, enabled=False)
+    hyper = Hyper(lr=jnp.float32(0.01), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    mesh = jax.make_mesh((4,), ("data",))
+    pol = QuantPolicy(quantize_weights=False, quantize_acts=False,
+                      quantize_grads=False, kernel_backend="off",
+                      dw_psum_axes=("data",), dw_num_replicas=4,
+                      overlap="on")
+    step = make_train_step(cfg, pol, ocfg)
+    f = jax.shard_map(lambda p, s, b: step(p, s, b, hyper, bits),
+                      mesh=mesh, in_specs=(P(), P(), P("data")),
+                      out_specs=(P(), P(), P()), check_vma=False)
+    hlo = jax.jit(f).lower(params, state, batch).compile().as_text()
+    ov = overlap_fraction(hlo)
+    assert ov["collectives"] > 0, ov
+    assert ov["overlap_fraction"] > 0.0, ov
+    assert ov["compute_ops_in_windows"] > 0, ov
+    print("OVFRAC", ov["overlap_fraction"], "OK")
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# the dryrun report surfaces overlap_fraction / pipe_bubble (satellite)
+# ---------------------------------------------------------------------------
+
+def test_dryrun_report_surfaces_overlap_and_pipe_bubble():
+    from repro.launch.report import render_dryrun_table
+    rec = {
+        "arch": "qwen1.5-0.5b", "cell": "train_4k", "mesh": "pod_16x16",
+        "status": "ok", "compile_s": 12.0,
+        "overlap_fraction": 0.25, "pipe_bubble": 0.2,
+        "scanned_artifact": {
+            "memory_analysis": {"argument_size_in_bytes": 1 << 20,
+                                "temp_size_in_bytes": 1 << 20},
+            "collectives": {"counts": {"all-reduce": 3}},
+            "overlap": {"overlap_fraction": 0.25},
+        },
+    }
+    legacy = dict(rec, cell="prefill_32k")
+    legacy.pop("overlap_fraction")
+    legacy.pop("pipe_bubble")
+    legacy["scanned_artifact"] = dict(rec["scanned_artifact"])
+    legacy["scanned_artifact"].pop("overlap")
+    table = render_dryrun_table([rec, legacy])
+    assert "| overlap | pipe bubble |" in table.splitlines()[0]
+    assert "| 0.25 | 0.20 |" in table     # new record renders the metrics
+    assert "| — | — |" in table           # pre-overlap records stay legible
+
+
+# ---------------------------------------------------------------------------
+# check_regression: missing committed baseline warns and skips (satellite)
+# ---------------------------------------------------------------------------
+
+def _run_gate(args):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / "check_regression.py"),
+         *args], capture_output=True, text=True, cwd=ROOT)
+
+
+def test_check_regression_missing_baseline_warns_and_skips(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(
+        [{"suite": "overlap", "name": "x", "us_per_call": 100.0}]))
+    out = _run_gate(["--baseline", str(tmp_path / "nope.json"),
+                     "--fresh", str(fresh)])
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "no committed baseline" in out.stdout
+
+
+def test_check_regression_still_gates_with_baseline(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(
+        [{"suite": "s", "name": "a", "us_per_call": 1000.0},
+         {"suite": "s", "name": "b", "us_per_call": 1000.0}]))
+    fresh.write_text(json.dumps(
+        [{"suite": "s", "name": "a", "us_per_call": 1000.0},
+         {"suite": "s", "name": "b", "us_per_call": 5000.0}]))
+    out = _run_gate(["--baseline", str(base), "--fresh", str(fresh)])
+    assert out.returncode == 1
+    assert "FAIL s/b" in out.stdout

@@ -177,14 +177,16 @@ def test_train_step_threads_pipeline_metrics():
     from repro.optim import Hyper, OptimizerConfig
     from test_models import make_batch, tiny
 
-    cfg = tiny("dense")
+    # pipeline_stages > 1 now EXECUTES stage-sharded, so the config must
+    # divide: 4 layers / 4 stages, batch 8 / 8 microbatches
+    cfg = tiny("dense", num_layers=4)
     params = lm.init_params(jax.random.key(0), cfg)
     ocfg = OptimizerConfig()
     step = jax.jit(make_train_step(
         cfg, QuantPolicy.off(), ocfg, pipeline_schedule="1f1b",
         pipeline_stages=4, num_microbatches=8))
     _, _, m = step(params, init_train_state(params, ocfg),
-                   make_batch(cfg, t=32),
+                   make_batch(cfg, b=8, t=32),
                    Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
                    default_bits(cfg, enabled=False))
     assert float(m["pipe_bubble"]) == pytest.approx(3 / 15)
@@ -195,6 +197,117 @@ def test_train_step_threads_pipeline_metrics():
                         pipeline_schedule=get_schedule("interleaved",
                                                        num_virtual=2),
                         pipeline_stages=5, num_microbatches=8)
+
+
+def test_pipeline_execution_build_time_validation():
+    """Indivisible layer counts and unsupported families/policy flags fail
+    at step-build time with clear errors."""
+    from repro.core import QuantPolicy, make_train_step
+    from repro.optim import OptimizerConfig
+    from test_models import tiny
+
+    ocfg = OptimizerConfig()
+    with pytest.raises(ValueError, match="does not divide"):
+        make_train_step(tiny("dense", num_layers=3), QuantPolicy.off(), ocfg,
+                        pipeline_schedule="1f1b", pipeline_stages=2,
+                        num_microbatches=4)
+    with pytest.raises(NotImplementedError, match="shared-operand"):
+        make_train_step(tiny("hybrid"), QuantPolicy.off(), ocfg,
+                        pipeline_schedule="gpipe", pipeline_stages=2,
+                        num_microbatches=4)
+    with pytest.raises(NotImplementedError, match="compress_dw"):
+        make_train_step(tiny("dense", num_layers=4),
+                        QuantPolicy(compress_dw=True), ocfg,
+                        pipeline_schedule="1f1b", pipeline_stages=2,
+                        num_microbatches=4)
+    with pytest.raises(NotImplementedError, match="overlap"):
+        make_train_step(tiny("dense", num_layers=4),
+                        QuantPolicy(overlap="on"), ocfg,
+                        pipeline_schedule="1f1b", pipeline_stages=2,
+                        num_microbatches=4)
+
+
+# ---------------------------------------------------------------------------
+# the engine's blocks stack EXECUTES through dist.pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_engine_stack_executes_through_pipeline(quant):
+    """pipeline_stages > 1 runs the TaxoNN engine's blocks stack through
+    pipeline_apply: loss bit-exact and updated params within float
+    reassociation of the single-device reverse scan, for all three
+    schedules (incl. the quantized G-chain via the grad taps)."""
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense", num_layers=4)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=32)
+    ocfg = OptimizerConfig(kind="momentum", grad_clip=1.0)
+    hyper = Hyper(lr=jnp.float32(0.05), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    pol = QuantPolicy(grad_scale=16.0) if quant else QuantPolicy.off()
+    bits = default_bits(cfg, enabled=quant)
+    p0, _, m0 = jax.jit(make_train_step(cfg, pol, ocfg))(
+        params, state, batch, hyper, bits)
+    for sname, virt in (("gpipe", None), ("1f1b", None), ("interleaved", 2)):
+        step = jax.jit(make_train_step(
+            cfg, pol, ocfg, pipeline_schedule=get_schedule(sname,
+                                                           num_virtual=virt),
+            pipeline_stages=4, num_microbatches=4))
+        p1, _, m1 = step(params, state, batch, hyper, bits)
+        assert float(m0["loss"]) == float(m1["loss"]), sname
+        worst = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)))
+        assert worst < 2e-6, (sname, quant, worst)
+        assert abs(float(m0["grad_norm"])
+                   - float(m1["grad_norm"])) < 1e-4, sname
+
+
+def test_engine_stack_pipe_mesh_exact():
+    """Stage-sharded execution on a REAL 4-device pipe mesh stays exact vs
+    the single-device scan for all three schedules."""
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.dist.pipeline import get_schedule
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense", num_layers=4)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=32)
+    ocfg = OptimizerConfig()
+    hyper = Hyper(lr=jnp.float32(0.05), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    bits = default_bits(cfg, enabled=False)
+    pol = QuantPolicy.off()
+    p0, _, m0 = jax.jit(make_train_step(cfg, pol, ocfg))(
+        params, state, batch, hyper, bits)
+
+    mesh = make_debug_mesh(1, 1, pipe=4)
+    for sname, virt in (("gpipe", None), ("1f1b", None), ("interleaved", 2)):
+        step = jax.jit(make_train_step(
+            cfg, pol, ocfg,
+            pipeline_schedule=get_schedule(sname, num_virtual=virt),
+            pipeline_stages=4, num_microbatches=4))
+        with jax.set_mesh(mesh):
+            p1, _, m1 = step(params, state, batch, hyper, bits)
+        assert float(m0["loss"]) == float(m1["loss"]), sname
+        worst = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(p0),
+                                    jax.tree.leaves(p1)))
+        assert worst < 2e-6, (sname, worst)
+        print(sname, "EXEC OK")
+    """)
+    assert ("gpipe EXEC OK" in out and "1f1b EXEC OK" in out
+            and "interleaved EXEC OK" in out)
 
 
 # ---------------------------------------------------------------------------

@@ -6,11 +6,14 @@ committed baseline and fail on wall-time regressions.
 
 Designed to survive CI noise and machine drift:
 
-  * rows are matched by (suite, name); rows present on only one side are
-    reported informationally, never fatally (new benches don't need a
-    baseline in the same PR that adds them); a --baseline FILE that does
-    not exist yet (a whole new suite landing in this PR) warns and skips
-    the gate instead of crashing CI
+  * rows are matched by (suite, name); rows present on only one side
+    never fail the gate (new benches don't need a baseline in the same PR
+    that adds them), but a BASELINE row that disappears from the fresh
+    run is warned about LOUDLY — the gate can no longer see that row, so
+    its absence must not read as a pass — and so is a run whose
+    comparable set is empty (the gate verified nothing); a --baseline
+    FILE that does not exist yet (a whole new suite landing in this PR)
+    warns and skips the gate instead of crashing CI
   * rows whose baseline wall-time is under ``--min-us`` are skipped — the
     timer jitter on micro-rows swamps any signal
   * the per-row ratio is normalized by the MINIMUM ratio across all
@@ -79,16 +82,38 @@ def main(argv=None) -> int:
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
+    if not baseline:
+        # the file exists but contains no timed rows (truncated regen,
+        # schema drift): same verified-nothing hazard as every baseline
+        # row disappearing — warn, and do NOT print the green OK line
+        print(f"warning: {args.baseline} exists but contains no rows with "
+              f"a numeric us_per_call — this gate run verified nothing")
+        return 0
     only_base = sorted(baseline.keys() - fresh.keys())
     only_fresh = sorted(fresh.keys() - baseline.keys())
     for k in only_base:
-        print(f"note: {'/'.join(k)} missing from fresh run")
+        # a row the baseline promises but the fresh run no longer reports
+        # is NOT a pass — the gate simply cannot see it anymore.  A rename
+        # or a benchmark that silently stopped emitting rows would
+        # otherwise green-wash a regression, so shout.
+        print(f"warning: baseline row {'/'.join(k)} DISAPPEARED from the "
+              f"fresh run — the gate cannot check it; if the row was "
+              f"renamed or removed on purpose, refresh {args.baseline}")
     for k in only_fresh:
         print(f"note: {'/'.join(k)} has no committed baseline yet")
 
     failures = check(baseline, fresh, tol, args.min_us)
     n_cmp = len([k for k in baseline.keys() & fresh.keys()
                  if baseline[k] >= args.min_us])
+    if baseline and not n_cmp:
+        # an empty comparable set means the gate verified NOTHING; today
+        # that is a warning (rows on one side are informational by
+        # design), but it must never read as a meaningful green result —
+        # so return WITHOUT printing the "gate OK" line below
+        print(f"warning: 0 of {len(baseline)} baseline rows were "
+              f"comparable (disappeared or below --min-us "
+              f"{args.min_us:.0f}us) — this gate run verified nothing")
+        return 0
     if failures:
         print(f"\n{len(failures)} of {n_cmp} rows regressed beyond "
               f"{tol:.0%} (after machine-shift normalization):")

@@ -15,6 +15,7 @@ and "enc_blocks" for encdec).  One compiled step serves every schedule.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -23,10 +24,12 @@ import jax.numpy as jnp
 from repro.core.taxonn import (
     QuantPolicy,
     _bits_xs,
+    apply_stacked_updates,
     backward_stack,
     default_bits_for,
     forward_stack,
     grad_tap,
+    grad_tap_stochastic,
     quantize_weight_tree,
 )
 from repro.kernels.ops import kernel_backend_ctx, resolve_backend
@@ -81,12 +84,14 @@ def num_scan_units(cfg: ModelConfig) -> int:
 # Per-family stack bodies: body(params_slice, shared, x, bits_l) -> (y, aux)
 # ---------------------------------------------------------------------------
 
-def _make_body(cfg: ModelConfig, positions, enc_out_in_shared: bool = False):
+def _make_body(cfg: ModelConfig, positions, enc_out_in_shared: bool = False,
+               moe_aux_parts: bool = False):
     fam = cfg.family
 
     if fam in ("dense", "moe", "vlm"):
         def body(p, shared, x, b_l):
-            return B.transformer_block(p, x, cfg, positions)
+            return B.transformer_block(p, x, cfg, positions,
+                                       moe_aux_parts=moe_aux_parts)
         return body
 
     if fam == "ssm":
@@ -168,31 +173,43 @@ def _bits_edge(bits, idx):
 # Stage-sharded stack execution through dist.pipeline
 # ---------------------------------------------------------------------------
 
-# Families whose per-layer body is self-contained (no cross-layer shared
-# operand, aux identically zero) — the ones the stage-sharded pipeline
-# path can run today.  hybrid (weight-tied shared attn), encdec (encoder
-# output feeds every layer) and moe (load-balance aux) stay on the scan.
-_PIPE_EXEC_FAMILIES = ("dense", "ssm", "vlm")
+def pipeline_exec_capabilities(cfg: ModelConfig,
+                               policy: QuantPolicy) -> dict:
+    """What the stage-sharded pipeline path can execute, per feature.
+
+    Every entry maps a requirement of this (cfg, policy) combination to
+    whether the pipeline path supports it.  Since the shared-operand story
+    (broadcast-class operands replicated/sliced per stage, reduce-class aux
+    summed post-drain) and the quant-feature parity work landed, every
+    family and every QuantPolicy feature is supported — the map exists so
+    ``_check_pipeline_exec`` DETECTS a missing capability instead of
+    hard-coding a family allowlist, and so callers (tests, the train
+    driver) can introspect support instead of parsing error text.
+    """
+    known = cfg.family in lm.SHARED_OPERAND_KIND
+    return {
+        f"family:{cfg.family}": known,
+        "stochastic": True,        # per-(layer, batch-row) PRNG threading
+        "quantize_updates": True,  # inside the vmapped/overlapped update
+        "compress_dw": True,       # per-layer codec in the update tail
+        "overlap": True,           # one-deep pipelined ring over dw axes
+    }
 
 
 def _check_pipeline_exec(cfg: ModelConfig, policy: QuantPolicy,
                          num_stages: int) -> None:
     """Build-time validation for executing the stack through dist.pipeline."""
-    if cfg.family not in _PIPE_EXEC_FAMILIES:
-        raise NotImplementedError(
-            f"pipeline execution (pipeline_stages={num_stages} > 1) supports "
-            f"families {_PIPE_EXEC_FAMILIES}; {cfg.family!r} needs the "
-            f"shared-operand scan path")
-    for flag in ("stochastic", "quantize_updates", "compress_dw"):
-        if getattr(policy, flag):
-            raise NotImplementedError(
-                f"pipeline execution does not support QuantPolicy.{flag} "
-                f"yet; run with pipeline_stages=1 or disable the flag")
+    caps = pipeline_exec_capabilities(cfg, policy)
+    active = [f"family:{cfg.family}"]
+    active += [f for f in ("stochastic", "quantize_updates", "compress_dw")
+               if getattr(policy, f)]
     if policy.overlap == "on":
+        active.append("overlap")
+    missing = [f for f in active if not caps.get(f, False)]
+    if missing:
         raise NotImplementedError(
-            "pipeline execution computes dW via vjp and cannot software-"
-            "pipeline the per-layer reduce; overlap='on' needs the scan "
-            "path (pipeline_stages=1)")
+            f"pipeline execution (pipeline_stages={num_stages} > 1) does "
+            f"not support {missing} for this configuration")
     n = num_scan_units(cfg)
     if n % num_stages:
         raise ValueError(
@@ -200,43 +217,117 @@ def _check_pipeline_exec(cfg: ModelConfig, policy: QuantPolicy,
             f"{num_stages} equal stages")
 
 
+def _unpipe(a, mesh):
+    """Constrain an array leaving pipeline_apply to be replicated over the
+    mesh (no-op without a pipe-axis mesh or outside a partitionable ctx)."""
+    if mesh is None or "pipe" not in getattr(mesh, "axis_names", ()):
+        return a
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, P(*([None] * a.ndim))))
+    except Exception:
+        return a
+
+
 def _pipeline_stack_forward(body, stacked, bits, policy: QuantPolicy,
                             x0: Array, sched, num_stages: int,
-                            num_microbatches: int, mesh) -> Array:
+                            num_microbatches: int, mesh, shared=(),
+                            shared_kind: str = "none",
+                            moe_experts: Optional[int] = None,
+                            rng: Optional[Array] = None):
     """Run the blocks stack stage-sharded through dist.pipeline.
 
     The stack's [L, ...] params reshape to [S, L/S, ...] stages and the
     batch splits into M microbatches; ``pipeline_apply`` executes them
     under ``sched`` with stages placed on the mesh's "pipe" axis.  Each
-    stage scans its own layers with the engine's forward quantization, and
+    stage runs its own layers (unrolled — see the in-body comment on why
+    not an inner scan) with the engine's forward quantization, and
     a ``grad_tap`` at every layer input quantizes the backward cotangent —
     so ``jax.vjp`` of this function IS the engine's G-chain (values match
     the sequential scan bit-exactly; per-layer dW matches the reverse
     scan's).  Unlike the scan path the full stacked dW tree materialises
     here: stage-sharding trades the paper's one-layer gradient residency
     for the pipe axis's parallelism.
+
+    Shared operands (``shared_kind``, see ``models.lm.SHARED_OPERAND_KIND``):
+
+    * ``"weights"`` (hybrid's weight-tied attn block): ``shared`` is
+      replicated to every stage — each layer quantizes it with its own
+      (I,F) just like the scan engine — and the vjp of the broadcast sums
+      the per-stage gradients.
+    * ``"activation"`` (encdec's encoder output): ``shared`` leaves are
+      full-batch activations; each stage slices the rows of the microbatch
+      it is currently processing (the microbatch index rides the rotating
+      pipeline value), and the slice's vjp scatter-adds the per-stage
+      cotangents back into the full-batch gradient.
+
+    Reduce-class side outputs (moe's load-balance aux) ride the pipeline
+    value as per-microbatch accumulators and are combined after the drain.
+    Because the aux is bilinear in two batch-mean statistics (expert pick
+    fraction x mean router prob), each stage writes its layers' per-
+    microbatch STATISTICS (``moe_experts`` set) and the post-drain
+    recombination averages them over microbatches before the product —
+    reproducing the scan engine's full-batch aux (and its gradient)
+    instead of the mean of per-microbatch aux values, which differs.
+    Families with scalar aux accumulate the scalar and normalize by M.
+
+    With ``policy.stochastic`` and an ``rng`` key, the backward cotangent
+    taps round stochastically with noise keyed per (layer, global batch
+    row): layer keys fold the unit index, row keys fold ``m * mb + b`` —
+    deterministic in (stage, microbatch, layer) and identical to the scan
+    engine's full-batch draws.
+
+    Returns ``(y [B, ...], aux_sum scalar)``.
     """
     from repro.dist.pipeline import pipeline_apply
-    L = jax.tree.leaves(stacked)[0].shape[0]
-    B = x0.shape[0]
+    n_units = jax.tree.leaves(stacked)[0].shape[0]
+    bsz = x0.shape[0]
     S, M = num_stages, num_microbatches
     # batch % M validated by the caller (the train step's pipe branch,
     # which needs the quotient before this function can even be built)
-    lps = L // S
+    lps = n_units // S
+    mbsz = bsz // M
     enabled = bits.enabled
+    use_stoch = (policy.quantize_grads and policy.stochastic
+                 and rng is not None)
     stage_p = jax.tree.map(lambda a: a.reshape((S, lps) + a.shape[1:]),
                            stacked)
     stage_b = jax.tree.map(lambda a: a.reshape((S, lps) + a.shape[1:]),
                            _bits_xs(bits))
-    x_mb = x0.reshape((M, B // M) + x0.shape[1:])
+    stage_l = jnp.arange(n_units, dtype=jnp.int32).reshape(S, lps)  # unit
+    x_mb = x0.reshape((M, mbsz) + x0.shape[1:])
 
-    def stage_body(bundle, h):
-        p_s, b_s = bundle
+    def stage_body(bundle, val):
+        p_s, b_s, l_s = bundle
+        m = val["m"]
+        if shared_kind == "activation":
+            sh = tuple(jax.lax.dynamic_slice_in_dim(s, m * mbsz, mbsz, 0)
+                       for s in shared)
+        else:
+            sh = shared
 
-        def layer(hh, xs_l):
-            p_l, b_l = xs_l
+        # remat-per-layer (the paper's recompute-in-backward discipline,
+        # same as the scan engine's cached-X_i + re-linearize): under
+        # jax.vjp the PRIMAL pass runs this body un-linearized, which is
+        # what keeps the pipeline's forward values — and therefore the
+        # loss — bit-identical to the scan engine's plain forward, and the
+        # backward re-linearizes each layer at exactly the per-layer
+        # inputs the forward produced (the engine's cached X_i).  Without
+        # it, partial-eval restructures the body (residual materialisation
+        # changes FMA/fusion rounding) and sub-ulp drift leaks into the
+        # forward.
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def layer(carry, xs_l):
+            p_l, b_l, l_idx = xs_l
+            hh = carry["h"]
             if policy.quantize_grads:
-                hh = grad_tap(hh, b_l["g_i"], b_l["g_f"], enabled)
+                if use_stoch:
+                    kd = jax.random.key_data(jax.random.fold_in(rng, l_idx))
+                    hh = grad_tap_stochastic(hh, b_l["g_i"], b_l["g_f"],
+                                             enabled, kd, m * mbsz)
+                else:
+                    hh = grad_tap(hh, b_l["g_i"], b_l["g_f"], enabled)
             if policy.quantize_acts:
                 hq = (enabled * quantize_ste(hh.astype(jnp.float32),
                                              b_l["a_i"], b_l["a_f"])
@@ -246,15 +337,61 @@ def _pipeline_stack_forward(body, stacked, bits, policy: QuantPolicy,
                 hq = hh
             wq = quantize_weight_tree(p_l, b_l["w_i"], b_l["w_f"], enabled,
                                       policy.quantize_weights)
-            y, _aux = body(wq, (), hq, b_l)
-            return y, None
+            sq = (quantize_weight_tree(sh, b_l["w_i"], b_l["w_f"], enabled,
+                                       policy.quantize_weights)
+                  if shared_kind == "weights" else sh)
+            y, aux_l = body(wq, sq, hq, b_l)
+            new = dict(carry, h=y)
+            if moe_experts:
+                # this unit's statistics land in its own row; other units'
+                # rows (written by other stages) pass through untouched
+                new["frac"] = jax.lax.dynamic_update_index_in_dim(
+                    carry["frac"], aux_l["frac"], l_idx, 0)
+                new["p"] = jax.lax.dynamic_update_index_in_dim(
+                    carry["p"], aux_l["p"], l_idx, 0)
+            else:
+                new["aux"] = carry["aux"] + aux_l
+            return new, None
 
-        h, _ = xscan(layer, h, (p_s, b_s))
-        return h
+        # the per-stage layer loop is UNROLLED, not scanned: partial-eval
+        # of an inner lax.scan stacks per-layer residuals, which perturbs
+        # fusion inside the scan body (observed as sub-ulp forward drift
+        # on the mamba families, amplified to grid steps by the act
+        # quantizer); the unrolled graph keeps each remat'd layer's
+        # primal bit-identical to the plain forward, at the cost of
+        # per-tick HLO growing with L/S.  Pipeline stages keep L/S small
+        # by construction, and the outer tick scan stays rolled.
+        carry = {k: v for k, v in val.items() if k != "m"}
+        for j in range(lps):
+            xs_j = (jax.tree.map(lambda a: a[j], p_s),
+                    {k: v[j] for k, v in b_s.items()}, l_s[j])
+            carry, _ = layer(carry, xs_j)
+        return dict(carry, m=m)
 
-    y = pipeline_apply((stage_p, stage_b), x_mb, stage_body, mesh,
-                       schedule=sched)
-    return y.reshape((B,) + y.shape[2:])
+    val0 = {"h": x_mb, "m": jnp.arange(M, dtype=jnp.int32)}
+    if moe_experts:
+        val0["frac"] = jnp.zeros((M, n_units, moe_experts), jnp.float32)
+        val0["p"] = jnp.zeros((M, n_units, moe_experts), jnp.float32)
+    else:
+        val0["aux"] = jnp.zeros((M,), jnp.float32)
+    out = pipeline_apply((stage_p, stage_b, stage_l), val0, stage_body,
+                         mesh, schedule=sched)
+    # the collected outputs leave the pipe axis here: pin them replicated
+    # so the head (and the aux recombination) runs the same single-program
+    # reductions as the scan reference instead of partitioner-split ones
+    # (sharded reductions reassociate, and the quantizers amplify that)
+    out = jax.tree.map(lambda a: _unpipe(a, mesh), out)
+    y = out["h"].reshape((bsz,) + out["h"].shape[2:])
+    if moe_experts:
+        # full-batch statistics = mean of per-microbatch statistics; the
+        # bilinear recombination AFTER the mean reproduces the scan
+        # engine's full-batch aux and, through this vjp, its gradient
+        frac = jnp.mean(out["frac"], axis=0)          # [L, E]
+        probs_mean = jnp.mean(out["p"], axis=0)       # [L, E]
+        aux_sum = jnp.sum(jax.vmap(L.moe_aux_from_stats)(frac, probs_mean))
+    else:
+        aux_sum = jnp.sum(out["aux"]) / M
+    return y, aux_sum
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +463,8 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         pipeline_schedule, pipeline_stages, num_microbatches)
 
     if engine == "autodiff":
-        def auto_step(params, opt_state, batch, hyper: Hyper, bits=None):
+        def auto_step(params, opt_state, batch, hyper: Hyper, bits=None,
+                      rng=None):  # rng accepted for signature parity
             with kernel_backend_ctx(backend):
                 (loss, metrics), grads = jax.value_and_grad(
                     lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
@@ -354,6 +492,12 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
 
     def _step_impl(params, opt_state, batch, hyper: Hyper, bits: dict,
                    rng: Optional[Array] = None):
+        if rng is not None:
+            # normalize to a typed key so the scan engine and the pipeline
+            # path fold the SAME key stream (legacy uint32 keys wrap here)
+            rng = jnp.asarray(rng)
+            if not jnp.issubdtype(rng.dtype, jax.dtypes.prng_key):
+                rng = jax.random.wrap_key_data(rng)
         main_bits = bits["blocks"]
         bnd_keys = boundary_keys(params)
         bnd = {k: params[k] for k in bnd_keys}
@@ -416,16 +560,31 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                                  f"num_microbatches={M_pipe}")
             pos_mb = jnp.broadcast_to(jnp.arange(total_t),
                                       (bsz // M_pipe, total_t))
-            body_mb = _make_body(cfg, pos_mb)
+            body_mb = _make_body(cfg, pos_mb, moe_aux_parts=fam == "moe")
+
+            def body_sh_mb(p, sh, x, b_l):
+                if fam == "hybrid":
+                    return body_mb(p, sh[0], x, b_l)
+                return body_mb(p, sh, x, b_l)
+
             mesh = jax.sharding.get_abstract_mesh()
+            shared_kind = lm.SHARED_OPERAND_KIND[fam]
 
-            def fwd_pipe(blocks, x0_):
+            def fwd_pipe(blocks, shared_, x0_):
                 return _pipeline_stack_forward(
-                    body_mb, blocks, main_bits, policy, x0_, sched,
-                    S_pipe, M_pipe, mesh)
+                    body_sh_mb, blocks, main_bits, policy, x0_, sched,
+                    S_pipe, M_pipe, mesh, shared=shared_,
+                    shared_kind=shared_kind,
+                    moe_experts=(cfg.num_experts if fam == "moe" else None),
+                    rng=rng)
 
-            x_final, pipe_vjp = jax.vjp(fwd_pipe, params["blocks"], x0)
-            aux_sum = jnp.float32(0.0)
+            # shared rides as a vjp argument: broadcast-class operands
+            # (hybrid's weight-tied attn, encdec's encoder output) get
+            # their gradient summed across stages by the transpose;
+            # reduce-class side outputs (moe's aux statistics) ride the
+            # pipeline value and are recombined post-drain into aux_sum
+            (x_final, aux_sum), pipe_vjp = jax.vjp(
+                fwd_pipe, params["blocks"], shared, x0)
         else:
             x_final, caches, aux_sum = forward_stack(
                 body_sh, params["blocks"], shared, x0, main_bits, policy,
@@ -441,22 +600,21 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         # ---- the G-chain: reverse scan with fused per-layer updates ------
         if pipe_exec:
             # vjp through the stage-sharded pipeline (grad taps reproduce
-            # the engine's per-layer G quantization); updates land on the
-            # stacked tree, vmapped per layer for exact scan parity
-            d_blocks, G_in = pipe_vjp(G_final)
-
-            def prep(g):
-                g = g.astype(jnp.float32) / scale
-                if policy.dw_psum_axes:
-                    g = jax.lax.psum(g, policy.dw_psum_axes)
-                return g
-            d_blocks = jax.tree.map(prep, d_blocks)
-            gsq = sum(jnp.sum(jnp.square(g))
-                      for g in jax.tree.leaves(d_blocks))
-            new_blocks, new_blocks_opt = jax.vmap(
-                lambda p, g, s: apply_update(p, g, s, hyper, optim_cfg)
-            )(params["blocks"], d_blocks, opt_state["blocks"])
-            dshared = shared  # unused: pipe families carry no shared operand
+            # the engine's per-layer G quantization); the update tail
+            # (core.taxonn.apply_stacked_updates) reduces each layer's dW
+            # over dw_psum_axes — compressed or dense, overlapped or
+            # blocking — quantizes the update (strict-paper mode) and
+            # applies it, with the scan engine's per-layer PRNG keys.
+            # The aux seed is the scalar loss coefficient; the post-drain
+            # recombination inside fwd_pipe distributes it per layer and
+            # microbatch by the chain rule.
+            d_blocks, dshared, G_in = pipe_vjp(
+                (G_final, jnp.asarray(AUX_COEF * scale, jnp.float32)))
+            d_blocks = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / scale, d_blocks)
+            new_blocks, new_blocks_opt, gsq = apply_stacked_updates(
+                params["blocks"], d_blocks, opt_state["blocks"], main_bits,
+                hyper, policy, optim_cfg, base_key=rng)
         else:
             G_in, new_blocks, new_blocks_opt, dshared, gsq = backward_stack(
                 body_sh, params["blocks"], shared, opt_state["blocks"],

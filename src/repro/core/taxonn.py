@@ -42,6 +42,7 @@ from repro.quant.fixed_point import (
     maybe_quantize,
     quantize_ste,
     quantize_stochastic,
+    stochastic_round_batched,
 )
 
 Array = jax.Array
@@ -118,7 +119,11 @@ def _quant_grad(g: Array, g_i, g_f, enabled: Array, policy: QuantPolicy,
         return g
     gf = g.astype(jnp.float32)
     if policy.stochastic and key is not None:
-        q = quantize_stochastic(gf, g_i, g_f, key)
+        # noise keyed per (layer key, global batch row) — NOT per tensor
+        # shape — so the stage-sharded pipeline, which quantizes G one
+        # microbatch at a time, makes the exact same draws (see
+        # stochastic_round_batched / grad_tap_stochastic)
+        q = stochastic_round_batched(gf, g_i, g_f, key, 0)
     else:
         q = quantize_ste(gf, g_i, g_f)
     return (enabled * q + (1.0 - enabled) * gf).astype(g.dtype)
@@ -150,6 +155,60 @@ def _grad_tap_bwd(res, ct):
 
 
 grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
+
+
+@jax.custom_vjp
+def grad_tap_stochastic(x: Array, g_i, g_f, enabled, key_data,
+                        offset) -> Array:
+    """``grad_tap`` with stochastic rounding: the cotangent is quantized
+    with per-batch-row noise drawn from ``fold_in(wrap(key_data),
+    offset + b)`` (see ``stochastic_round_batched``).  ``key_data`` is the
+    layer key as raw uint32 (``jax.random.key_data``) so the custom_vjp
+    signature stays free of typed-key cotangents; ``offset`` is the
+    microbatch's first global batch row, which makes the pipeline's
+    per-microbatch draws identical to the scan engine's full-batch ones."""
+    return x
+
+
+def _grad_tap_stoch_fwd(x, g_i, g_f, enabled, key_data, offset):
+    return x, (g_i, g_f, enabled, key_data, offset)
+
+
+def _grad_tap_stoch_bwd(res, ct):
+    g_i, g_f, enabled, key_data, offset = res
+    key = jax.random.wrap_key_data(key_data)
+    ctf = ct.astype(jnp.float32)
+    q = stochastic_round_batched(ctf, g_i, g_f, key, offset)
+    ct_q = (enabled * q + (1.0 - enabled) * ctf).astype(ct.dtype)
+    return (ct_q, jnp.zeros_like(g_i), jnp.zeros_like(g_f),
+            jnp.zeros_like(enabled), jnp.zeros_like(key_data),
+            jnp.zeros_like(offset))
+
+
+grad_tap_stochastic.defvjp(_grad_tap_stoch_fwd, _grad_tap_stoch_bwd)
+
+
+def quantize_update(g: Array, b_l: dict, key: Optional[Array],
+                    enabled: Array, policy: QuantPolicy,
+                    hyper: Hyper) -> Array:
+    """Strict-paper mode: quantize the update itself (post-reduction).
+
+    ``q(alpha * dW)`` in the layer's gradient (I,F) format, returned in the
+    dW domain (divided back by lr) so the optimizer applies it unchanged.
+    Shared by the scan engine's per-layer fused update and the stage-sharded
+    pipeline's vmapped/overlapped update paths — both quantize the SAME
+    post-reduction tensor with the SAME per-layer key, which is what keeps
+    the two paths within float reassociation of each other.
+    """
+    if not policy.quantize_updates:
+        return g
+    upd = hyper.lr * g
+    if policy.stochastic and key is not None:
+        updq = quantize_stochastic(upd, b_l["g_i"], b_l["g_f"], key)
+    else:
+        updq = quantize_ste(upd, b_l["g_i"], b_l["g_f"])
+    upd = enabled * updq + (1.0 - enabled) * upd
+    return upd / jnp.maximum(hyper.lr, 1e-20)
 
 
 def _bits_xs(bits: BitSchedule) -> dict:
@@ -200,6 +259,55 @@ def forward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
 # Backward: the G-chain reverse scan with fused per-layer update
 # ---------------------------------------------------------------------------
 
+def _overlapped_update_helpers(policy: QuantPolicy, hyper: Hyper,
+                               optim_cfg: OptimizerConfig, enabled: Array,
+                               key_for: Callable):
+    """Scaffolding of the one-deep software-pipelined per-layer dW reduce,
+    shared by the overlapped backward scan and the stacked update tail
+    (``apply_stacked_updates``) so the subtlest pieces exist exactly once:
+
+    ``start``     issue a layer's ring all-reduce (dense or compressed)
+    ``finalize``  wait on the in-flight handle, update-quantize, land the
+                  delayed optimizer step; returns (new_p, new_opt, gsq)
+    ``pending0``  warm-up carry: zero slices + a dummy handle (no hops)
+    ``align``     undo the reverse scan's one-slot lag — ys slot i holds
+                  the FINALIZED layer i+1 (slot n-1 the warm-up dummy) and
+                  the drained layer 0 is prepended
+    """
+    def start(dW, dummy=False):
+        return tree_all_reduce_start(dW, policy.dw_psum_axes,
+                                     compressed=policy.compress_dw,
+                                     num_replicas=policy.dw_num_replicas,
+                                     dummy=dummy)
+
+    def finalize(pending):
+        dW = tree_all_reduce_wait(pending["h"])
+        key = key_for(pending["idx"])
+        dW = jax.tree.map(
+            lambda g: quantize_update(g, pending["bits"], key, enabled,
+                                      policy, hyper), dW)
+        new_p, new_opt = apply_update(pending["p"], dW, pending["opt"],
+                                      hyper, optim_cfg)
+        gsq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dW))
+        return new_p, new_opt, gsq
+
+    def slice0(tree, dtype=None):
+        return jax.tree.map(
+            lambda a: jnp.zeros(a.shape[1:], dtype or a.dtype), tree)
+
+    def pending0(stacked, opt_stacked, bits_xs):
+        return {"p": slice0(stacked), "opt": slice0(opt_stacked),
+                "h": start(slice0(stacked, jnp.float32), dummy=True),
+                "bits": slice0(bits_xs), "idx": jnp.int32(0)}
+
+    def align(flush, ys):
+        return jax.tree.map(
+            lambda f, y: jnp.concatenate([f[None], y[:-1]], axis=0),
+            flush, ys)
+
+    return start, finalize, pending0, align
+
+
 def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
                    opt_stacked: PyTree, caches: PyTree, bits: BitSchedule,
                    G_out: Array, hyper: Hyper, policy: QuantPolicy,
@@ -246,16 +354,7 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
                 if (base_key is not None and policy.stochastic) else None)
 
     def _quant_update(g, b_l, key):
-        """Strict-paper mode: quantize the update itself (post-reduction)."""
-        if not policy.quantize_updates:
-            return g
-        upd = hyper.lr * g
-        if policy.stochastic and key is not None:
-            updq = quantize_stochastic(upd, b_l["g_i"], b_l["g_f"], key)
-        else:
-            updq = quantize_ste(upd, b_l["g_i"], b_l["g_f"])
-        upd = enabled * updq + (1.0 - enabled) * upd
-        return upd / jnp.maximum(hyper.lr, 1e-20)
+        return quantize_update(g, b_l, key, enabled, policy, hyper)
 
     def _vjp_layer(G, p_l, x_l, b_l):
         def f(pw, sw, xx):
@@ -309,22 +408,8 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         return G_in, new_stacked, new_opt, dshared, gsq
 
     # ---- communication-overlapped software pipeline ----------------------
-    def _start(dW, dummy=False):
-        return tree_all_reduce_start(dW, policy.dw_psum_axes,
-                                     compressed=policy.compress_dw,
-                                     num_replicas=policy.dw_num_replicas,
-                                     dummy=dummy)
-
-    def _finalize(pending):
-        """Wait on the in-flight reduce and land the (delayed) update."""
-        dW = tree_all_reduce_wait(pending["h"])
-        key = _key_for(pending["idx"])
-        dW = jax.tree.map(lambda g: _quant_update(g, pending["bits"], key),
-                          dW)
-        new_p, new_opt = apply_update(pending["p"], dW, pending["opt"],
-                                      hyper, optim_cfg)
-        gsq_inc = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dW))
-        return new_p, new_opt, gsq_inc
+    _start, _finalize, _pending0, _align = _overlapped_update_helpers(
+        policy, hyper, optim_cfg, enabled, _key_for)
 
     def bwd(carry, xs):
         G, dshared_acc, gsq, pending = carry
@@ -343,30 +428,94 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         return (G_next, dshared_acc, gsq + gsq_inc, pending_new), \
             (fin_p, fin_opt)
 
-    def slice0(tree, dtype=None):
-        return jax.tree.map(
-            lambda a: jnp.zeros(a.shape[1:], dtype or a.dtype), tree)
-
-    pending0 = {
-        "p": slice0(stacked),
-        "opt": slice0(opt_stacked),
-        # warm-up: the handle a start on zeros would yield, no hops burned
-        "h": _start(slice0(stacked, jnp.float32), dummy=True),
-        "bits": slice0(_bits_xs(bits)),
-        "idx": jnp.int32(0),
-    }
     xs = (stacked, opt_stacked, caches, _bits_xs(bits),
           jnp.arange(n_units, dtype=jnp.int32))
     (G_in, dshared, gsq, pending), (fin_stacked, fin_opt) = xscan(
-        bwd, (G_out, shared_f32, jnp.float32(0.0), pending0), xs,
+        bwd, (G_out, shared_f32, jnp.float32(0.0),
+              _pending0(stacked, opt_stacked, _bits_xs(bits))), xs,
         reverse=True)
     # drain: layer 0's reduce is still in flight after the scan
     flush_p, flush_opt, gsq_f = _finalize(pending)
-    # re-align: the reverse scan's ys slot i holds the *finalized* layer
-    # i+1 (slot n-1 holds the warm-up dummy); layer 0 is the drain value
-    def align(flush, ys):
-        return jax.tree.map(
-            lambda f, y: jnp.concatenate([f[None], y[:-1]], axis=0),
-            flush, ys)
-    return (G_in, align(flush_p, fin_stacked), align(flush_opt, fin_opt),
+    return (G_in, _align(flush_p, fin_stacked), _align(flush_opt, fin_opt),
             dshared, gsq + gsq_f)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-dW update tail (the stage-sharded pipeline path)
+# ---------------------------------------------------------------------------
+
+def apply_stacked_updates(stacked: PyTree, dW: PyTree, opt_stacked: PyTree,
+                          bits: BitSchedule, hyper: Hyper,
+                          policy: QuantPolicy, optim_cfg: OptimizerConfig,
+                          base_key: Optional[Array] = None):
+    """Reduce + quantize + apply per-layer updates of a fully materialised
+    stacked dW tree — the update tail of the stage-sharded pipeline path,
+    where ``jax.vjp`` through ``dist.pipeline`` hands back all layers' dW
+    at once instead of one layer per reverse-scan step.
+
+    Per layer (mirroring ``backward_stack``'s fused step 4, same order and
+    same per-layer PRNG keys, so both paths agree to float reassociation):
+    the dW leaves go through ``compressed_psum`` (``policy.compress_dw``)
+    or a dense ``lax.psum`` over ``policy.dw_psum_axes`` — composing the
+    pipe axis with the data axis — then ``quantize_update`` (strict-paper
+    ``q(alpha*dW)``), then the optimizer.
+
+    ``policy.overlap == "off"``: one vmap over the layer axis.
+    ``policy.overlap == "on"``: a reverse scan whose per-layer ring reduce
+    is software-pipelined one step deep (start layer i's reduce, land layer
+    i+1's while its hops overlap this step's update compute), identical in
+    structure to the overlapped backward scan; with no ``dw_psum_axes``
+    the handles are identities and the results are bitwise equal to the
+    vmapped path.
+
+    Returns ``(new_stacked, new_opt, grad_sq_sum)``.
+    """
+    enabled = bits.enabled
+    n_units = jax.tree.leaves(stacked)[0].shape[0]
+    bxs = _bits_xs(bits)
+    idxs = jnp.arange(n_units, dtype=jnp.int32)
+
+    def _key_for(idx):
+        return (jax.random.fold_in(base_key, idx)
+                if (base_key is not None and policy.stochastic) else None)
+
+    if policy.overlap != "on":
+        def upd(p_l, g_l, s_l, b_l, idx):
+            key = _key_for(idx)
+
+            def prep(g):
+                if policy.compress_dw:
+                    g = compressed_psum(g, policy.dw_psum_axes,
+                                        num_replicas=policy.dw_num_replicas)
+                elif policy.dw_psum_axes:
+                    g = lax.psum(g, policy.dw_psum_axes)
+                return quantize_update(g, b_l, key, enabled, policy, hyper)
+
+            g_l = jax.tree.map(prep, g_l)
+            new_p, new_s = apply_update(p_l, g_l, s_l, hyper, optim_cfg)
+            gsq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_l))
+            return new_p, new_s, gsq
+
+        new_p, new_s, gsqs = jax.vmap(upd)(stacked, dW, opt_stacked, bxs,
+                                           idxs)
+        return new_p, new_s, jnp.sum(gsqs)
+
+    _start, _finalize, _pending0, _align = _overlapped_update_helpers(
+        policy, hyper, optim_cfg, enabled, _key_for)
+
+    def body(carry, xs):
+        gsq, pending = carry
+        p_l, g_l, s_l, b_l, idx = xs
+        handles = _start(g_l)
+        fin_p, fin_s, ginc = _finalize(pending)
+        pending_new = {"p": p_l, "opt": s_l, "h": handles, "bits": b_l,
+                       "idx": idx}
+        return (gsq + ginc, pending_new), (fin_p, fin_s)
+
+    xs = (stacked, dW, opt_stacked, bxs, idxs)
+    (gsq, pending), (fin_p, fin_s) = xscan(
+        body, (jnp.float32(0.0), _pending0(stacked, opt_stacked, bxs)), xs,
+        reverse=True)
+    # drain + re-align exactly like the overlapped backward scan above
+    flush_p, flush_s, gsq_f = _finalize(pending)
+    return _align(flush_p, fin_p), _align(flush_s, fin_s), gsq + gsq_f

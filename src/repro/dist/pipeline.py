@@ -6,7 +6,12 @@ Two layers live here:
 runs M microbatches through S stages as pure differentiable JAX: one
 ``lax.scan`` over the forward diagonal (T = M + S - 1 ticks) with
 predicated writes, so forward values AND gradients (via the scan's
-transpose) equal the sequential reference exactly.  Warm-up/drain ticks
+transpose) equal the sequential reference exactly.  The pipeline value
+``x`` is a pytree ([M, ...] leaves): side values ride the rotating buffer
+with the activation — per-microbatch reduce-class accumulators (aux-loss
+statistics a stage adds to) and the microbatch index itself, which stages
+use to slice broadcast-class operands (an encoder-output fan-out) down to
+their current microbatch.  Warm-up/drain ticks
 compute on zero-filled garbage that is never written to the output.  The
 schedule selects the *stage placement*: GPipe/1F1B pin stage s to pipe
 device s; interleaved-1F1B assigns ``num_virtual`` non-contiguous virtual
@@ -398,15 +403,24 @@ def _slot_maps(sched: Schedule, S: int) -> Tuple[np.ndarray, np.ndarray,
     return stage_of_slot, slot_of_stage, route, identity
 
 
-def pipeline_apply(stage_params, x: jax.Array, body: Callable,
+def pipeline_apply(stage_params, x, body: Callable,
                    mesh=None,
-                   schedule: Union[str, Schedule, None] = "gpipe"
-                   ) -> jax.Array:
+                   schedule: Union[str, Schedule, None] = "gpipe"):
     """Apply an S-stage pipeline to M microbatches under a schedule.
 
     stage_params : pytree whose leaves carry a leading stage axis [S, ...]
-    x            : [M, microbatch...] input microbatches
-    body         : body(stage_params_s, h) -> h, one stage on one microbatch
+    x            : pytree whose leaves carry a leading microbatch axis
+                   [M, microbatch...].  A bare array is the common case; a
+                   pytree lets side values ride the rotating buffer with
+                   the activation — e.g. a per-microbatch aux-loss
+                   accumulator each stage adds to (reduce-class operand,
+                   summed by the caller after the drain) or the microbatch
+                   index itself, which stages use to slice broadcast-class
+                   operands (an encoder output fan-out) down to their
+                   current microbatch
+    body         : body(stage_params_s, v) -> v', one stage on one
+                   microbatch value; must preserve the value's structure
+                   and leaf shapes so the result can recirculate
     mesh         : optional mesh with a "pipe" axis to pin stages to devices
     schedule     : "gpipe" | "1f1b" | "interleaved" or a Schedule; selects
                    the stage->device placement (interleaved permutes the
@@ -417,11 +431,11 @@ def pipeline_apply(stage_params, x: jax.Array, body: Callable,
                    stages sequentially over each microbatch, and gradients
                    (the scan's transpose) match the sequential reference.
 
-    Returns [M, microbatch...].
+    Returns a pytree shaped like ``x`` ([M, microbatch...] leaves).
     """
     sched = get_schedule(schedule)
     S = jax.tree.leaves(stage_params)[0].shape[0]
-    M = x.shape[0]
+    M = jax.tree.leaves(x)[0].shape[0]
     sched.validate(S, M)
     stage_of_slot, slot_of_stage, route, identity = _slot_maps(sched, S)
     in_slot = int(slot_of_stage[0])
@@ -439,24 +453,36 @@ def pipeline_apply(stage_params, x: jax.Array, body: Callable,
         buf, outs = carry                    # buf [S, mb...]: slot inputs
         # feed microbatch t into stage 0's slot (garbage recirculates after
         # drain; its outputs fall past tick T and are never collected)
-        inp = lax.dynamic_index_in_dim(x, jnp.clip(t, 0, M - 1), 0,
-                                       keepdims=False)
-        buf = buf.at[in_slot].set(jnp.where(t < M, inp, buf[in_slot]))
-        buf = _stage_constrain(buf, mesh)
+        t_in = jnp.clip(t, 0, M - 1)
+        buf = jax.tree.map(
+            lambda b, a: b.at[in_slot].set(jnp.where(
+                t < M,
+                lax.dynamic_index_in_dim(a, t_in, 0, keepdims=False),
+                b[in_slot])),
+            buf, x)
+        buf = jax.tree.map(lambda b: _stage_constrain(b, mesh), buf)
         new = jax.vmap(body)(params_slots, buf)  # all slots, one tick
         # stage S-1's slot finished microbatch t-(S-1): write it out
         # (predicated — warm-up ticks produce garbage that must not touch
         # outs or grads)
         idx = t - (S - 1)
         idx_c = jnp.maximum(idx, 0)
-        cur = lax.dynamic_index_in_dim(outs, idx_c, 0, keepdims=False)
-        outs = lax.dynamic_update_index_in_dim(
-            outs, jnp.where(idx >= 0, new[out_slot], cur), idx_c, 0)
+
+        def write(o, n):
+            cur = lax.dynamic_index_in_dim(o, idx_c, 0, keepdims=False)
+            return lax.dynamic_update_index_in_dim(
+                o, jnp.where(idx >= 0, n[out_slot], cur), idx_c, 0)
+
+        outs = jax.tree.map(write, outs, new)
         # route: the slot holding stage s feeds the slot holding stage s+1
         # (identity placement lowers to the classic rotate-by-one)
-        nxt = jnp.roll(new, 1, axis=0) if identity else new[route_idx]
+        nxt = jax.tree.map(
+            lambda n: jnp.roll(n, 1, axis=0) if identity else n[route_idx],
+            new)
         return (nxt, outs), None
 
-    buf0 = jnp.zeros((S,) + x.shape[1:], x.dtype)
-    (_, outs), _ = lax.scan(tick, (buf0, jnp.zeros_like(x)), jnp.arange(T))
+    buf0 = jax.tree.map(
+        lambda a: jnp.zeros((S,) + a.shape[1:], a.dtype), x)
+    outs0 = jax.tree.map(jnp.zeros_like, x)
+    (_, outs), _ = lax.scan(tick, (buf0, outs0), jnp.arange(T))
     return outs

@@ -242,8 +242,12 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
         })
         if pipe is not None and cell.kind == "train":
             from repro.dist.pipeline import get_schedule
-            record["pipe_bubble"] = get_schedule(pipe[0]).bubble_fraction(
+            sched_obj = get_schedule(pipe[0])
+            record["pipe_bubble"] = sched_obj.bubble_fraction(
                 pipe[1], pipe[2])
+            record["pipe"] = {"schedule": pipe[0], "stages": pipe[1],
+                              "microbatches": pipe[2],
+                              **sched_obj.summary(pipe[1], pipe[2])}
         # --- exact cost pass (unrolled reduced-depth extrapolation) -------
         t1 = time.time()
         with perf_options_ctx(opts):
@@ -290,7 +294,10 @@ def main():
     ap.add_argument("--pipeline-schedule", default="none",
                     choices=["none", "gpipe", "1f1b", "interleaved"],
                     help="build TRAIN cells with stage-sharded pipeline "
-                         "execution (records pipe_bubble)")
+                         "execution (every model family — hybrid/encdec/"
+                         "moe shared operands included; records "
+                         "pipe_bubble + the schedule summary; layer count "
+                         "must divide into --pipe-stages)")
     ap.add_argument("--pipe-stages", type=int, default=4)
     ap.add_argument("--microbatches", type=int, default=8)
     args = ap.parse_args()

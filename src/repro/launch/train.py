@@ -84,6 +84,14 @@ def main(argv=None):
     ap.add_argument("--compress-dw", action="store_true",
                     help="route per-layer dW through the int8 block-scaled "
                          "wire format inside the backward scan")
+    ap.add_argument("--stochastic", action="store_true",
+                    help="stochastic rounding for the quantized G chain "
+                         "(and updates with --quantize-updates); noise is "
+                         "keyed per (layer, global batch row), so the scan "
+                         "and pipeline paths make identical draws")
+    ap.add_argument("--quantize-updates", action="store_true",
+                    help="strict paper mode: quantize q(alpha*dW) in the "
+                         "layer's gradient (I,F) format before the update")
     ap.add_argument("--overlap", default="off", choices=["off", "on"],
                     help="software-pipeline each layer's dW all-reduce one "
                          "backward-scan step deep (ring ppermute chunks "
@@ -102,8 +110,11 @@ def main(argv=None):
                     choices=["none", "gpipe", "1f1b", "interleaved"],
                     help="pipe-axis pipeline schedule; with stages > 1 the "
                          "engine's blocks stack EXECUTES stage-sharded "
-                         "through repro.dist.pipeline (layers and batch "
-                         "must divide into stages and microbatches)")
+                         "through repro.dist.pipeline for EVERY model "
+                         "family (hybrid/encdec shared operands replicate "
+                         "or slice per stage, moe aux statistics reduce "
+                         "post-drain; layers and batch must divide into "
+                         "stages and microbatches)")
     ap.add_argument("--virtual-stages", type=int, default=2,
                     help="virtual stages per pipe device (interleaved "
                          "schedule only)")
@@ -141,7 +152,9 @@ def main(argv=None):
               else QuantPolicy.off())
     policy = dataclasses.replace(policy, kernel_backend=args.kernel_backend,
                                  compress_dw=args.compress_dw,
-                                 overlap=args.overlap)
+                                 overlap=args.overlap,
+                                 stochastic=args.stochastic,
+                                 quantize_updates=args.quantize_updates)
     bits = default_bits(cfg, enabled=args.quantize)
     sched = cosine_schedule(args.lr, warmup=max(10, args.steps // 20),
                             total=args.steps)
@@ -176,9 +189,23 @@ def main(argv=None):
     with jax.set_mesh(mesh), activation_sharding_ctx(rules):
         for step in range(start_step, args.steps):
             batch = {k: jnp.asarray(v) for k, v in loader.get(step).items()}
+            # the synthetic LM loader only makes tokens/labels; encdec and
+            # vlm need their modality-side inputs too (deterministic per
+            # step, so checkpoint-resume replays the same stream)
+            bsz = batch["tokens"].shape[0]
+            if cfg.family == "encdec" and "frames" not in batch:
+                batch["frames"] = jax.random.normal(
+                    jax.random.fold_in(jax.random.key(2), step),
+                    (bsz, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            if cfg.family == "vlm" and "patch_embeds" not in batch:
+                batch["patch_embeds"] = jax.random.normal(
+                    jax.random.fold_in(jax.random.key(3), step),
+                    (bsz, cfg.num_patches, cfg.d_model), jnp.float32)
             hyper = Hyper(lr=jnp.float32(sched(step)), step=jnp.int32(step))
+            rng = (jax.random.fold_in(jax.random.key(1), step)
+                   if args.stochastic else None)
             params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 hyper, bits)
+                                                 hyper, bits, rng)
             losses.append(float(metrics["loss"]))
             if step % args.log_every == 0 or step == args.steps - 1:
                 dt = time.time() - t0

@@ -44,7 +44,12 @@ def init_transformer_block(key, cfg: ModelConfig):
 
 
 def transformer_block(params, x: Array, cfg: ModelConfig, positions: Array,
-                      causal: bool = True):
+                      causal: bool = True, moe_aux_parts: bool = False):
+    """``moe_aux_parts=True`` returns the load-balance aux as its two
+    batch-mean statistics ``{"frac", "p"}`` instead of the contracted
+    scalar — the aux is bilinear in those means, so microbatched callers
+    (the stage-sharded pipeline) must accumulate the parts and recombine
+    via ``layers.moe_aux_from_stats`` to keep full-batch semantics."""
     x = constrain(x, "btd")
     h = L.apply_norm(params["attn_norm"], x, cfg)
     if cfg.use_mla:
@@ -54,8 +59,14 @@ def transformer_block(params, x: Array, cfg: ModelConfig, positions: Array,
     x = x + attn_out
     h = L.apply_norm(params["mlp_norm"], x, cfg)
     if cfg.family == "moe":
-        mlp_out, aux = L.moe(params["moe"], h, cfg)
+        if moe_aux_parts:
+            mlp_out, frac, probs_mean = L.moe_verbose(params["moe"], h, cfg)
+            aux = {"frac": frac, "p": probs_mean}
+        else:
+            mlp_out, aux = L.moe(params["moe"], h, cfg)
     else:
+        # non-moe blocks have no aux statistics; the flag only changes the
+        # moe branch (callers set it for cfg.family == "moe" stacks)
         mlp_out, aux = L.mlp(params["mlp"], h, cfg), jnp.float32(0.0)
     x = constrain(x + mlp_out, "btd")
     return x, aux

@@ -649,7 +649,21 @@ def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8
 
 
-def moe(params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+def moe_aux_from_stats(frac: Array, probs_mean: Array) -> Array:
+    """Load-balance aux loss from its two batch-mean statistics.
+
+    ``aux = E * sum_e frac[e] * probs_mean[e]`` is BILINEAR in two batch
+    means, so it does not decompose over microbatches (the mean of
+    per-microbatch aux values is NOT the full-batch aux).  Callers that
+    split the batch — the stage-sharded pipeline — accumulate ``frac`` and
+    ``probs_mean`` separately (``moe_verbose``), average them across
+    microbatches, and recombine here to reproduce full-batch semantics.
+    """
+    return jnp.sum(frac * probs_mean) * frac.shape[-1]
+
+
+def moe_verbose(params, x: Array, cfg: ModelConfig
+                ) -> tuple[Array, Array, Array]:
     """Top-k routed MoE with PER-SEQUENCE sort-based capacity dispatch.
 
     Dispatch (sort, rank, scatter) happens independently per batch row along
@@ -658,7 +672,9 @@ def moe(params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
     at 1M tokens costs hundreds of GiB of temps and a distributed sort).
     Capacity is per sequence: C = ceil(T*K/E * capacity_factor).
 
-    Returns (output, aux_loss) with the standard load-balance aux term.
+    Returns (output, frac [E], probs_mean [E]) — the aux-loss statistics
+    exposed separately so microbatched callers can accumulate them (see
+    ``moe_aux_from_stats``); ``moe`` below contracts them to the scalar.
     """
     dt = x.dtype
     b, t, D = x.shape
@@ -671,9 +687,9 @@ def moe(params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
     top_p, top_e = lax.top_k(probs, K)                    # [b,t,K]
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
 
-    # load-balance auxiliary loss
+    # load-balance aux statistics (expert pick fraction, mean router prob)
     frac = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1, 2))
-    aux = jnp.sum(frac * jnp.mean(probs, axis=(0, 1))) * E
+    probs_mean = jnp.mean(probs, axis=(0, 1))
 
     # ---- per-row sort-based dispatch (all ops batched over b) -----------
     flat_e = top_e.reshape(b, nk)
@@ -730,4 +746,11 @@ def moe(params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
         us = x @ sh["w_up"].astype(dt)
         out = out + (gs * us) @ sh["w_down"].astype(dt)
 
-    return out, aux
+    return out, frac, probs_mean
+
+
+def moe(params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """``moe_verbose`` with the statistics contracted to the standard
+    scalar load-balance aux loss."""
+    out, frac, probs_mean = moe_verbose(params, x, cfg)
+    return out, moe_aux_from_stats(frac, probs_mean)

@@ -72,6 +72,25 @@ def init_params(key, cfg: ModelConfig) -> dict:
     return params
 
 
+# How each family's main stack consumes operands that are not the layer's
+# own parameters or the flowing activation — the contract the stage-sharded
+# pipeline path (core/steps.py) uses to replicate or slice them:
+#   "none"       self-contained per-layer bodies (dense/moe/vlm/ssm)
+#   "weights"    a weight-tied block applied by every unit (hybrid's shared
+#                attn): broadcast-class — replicated to every stage, layer-
+#                quantized in place, gradient summed across stages by the
+#                vjp of the broadcast
+#   "activation" a full-batch activation fanned out to every layer (encdec's
+#                encoder output): broadcast-class, but batch-indexed — each
+#                stage slices the microbatch it is processing
+# (moe's load-balance aux loss is the reduce-class counterpart: a per-layer
+# side OUTPUT accumulated across stages and summed after the drain.)
+SHARED_OPERAND_KIND = {
+    "dense": "none", "moe": "none", "vlm": "none", "ssm": "none",
+    "hybrid": "weights", "encdec": "activation",
+}
+
+
 def hybrid_groups(cfg: ModelConfig) -> tuple[int, int]:
     """Zamba2-style grouping: shared attn block applied every `attn_every`
     mamba layers -> G groups of K layers."""

@@ -11,6 +11,7 @@ from repro.quant.fixed_point import (
     quantize,
     quantize_ste,
     quantize_stochastic,
+    stochastic_round_batched,
     fxp_resolution,
     fxp_max,
     BitSchedule,
@@ -43,6 +44,7 @@ __all__ = [
     "quantize",
     "quantize_ste",
     "quantize_stochastic",
+    "stochastic_round_batched",
     "fxp_resolution",
     "fxp_max",
     "BitSchedule",

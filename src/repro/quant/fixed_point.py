@@ -138,6 +138,29 @@ def _stochastic_value(x, i_bits, f_bits, key):
     return k * step
 
 
+def stochastic_round_batched(x: Array, i_bits: Array, f_bits: Array,
+                             key: Array, offset) -> Array:
+    """Stochastic rounding whose noise is drawn PER LEADING-AXIS ELEMENT:
+    row ``b`` uses ``fold_in(key, offset + b)``.
+
+    Because each batch row owns its fold of the key, slicing the leading
+    (batch) axis and passing the slice's global offset reproduces the
+    full-batch draws exactly.  This is what lets the stage-sharded pipeline
+    (which sees one microbatch at a time) make the same draws as the
+    single-device scan engine (which sees the whole batch): the keys are
+    deterministic in (layer key, global batch row), not in tensor shape.
+
+    Value-only — callers on the manual G-chain apply it to cotangents
+    directly; the forward-graph wrapper with an STE transpose lives in
+    ``core.taxonn.grad_tap_stochastic``.
+    """
+    off = jnp.asarray(offset, jnp.int32)
+    keys = jax.vmap(lambda b: jax.random.fold_in(key, off + b))(
+        jnp.arange(x.shape[0], dtype=jnp.int32))
+    return jax.vmap(lambda k, xb: _stochastic_value(xb, i_bits, f_bits, k))(
+        keys, x)
+
+
 def _stoch_fwd(x, i_bits, f_bits, key):
     bound = fxp_max(i_bits, f_bits).astype(x.dtype)
     mask = (jnp.abs(x) <= bound).astype(x.dtype)

@@ -1,0 +1,75 @@
+"""benchmarks/check_regression.py gate semantics: disappeared baseline
+rows and empty comparable sets must WARN explicitly (an empty per-family
+row set is not a pass), regressions must fail, shifts must not."""
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+GATE = ROOT / "benchmarks" / "check_regression.py"
+
+
+def _rows(named_us):
+    return [{"suite": "pipeline", "name": n, "us_per_call": us}
+            for n, us in named_us.items()]
+
+
+def run_gate(tmp_path, base, fresh, extra=()):
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(_rows(base)))
+    f.write_text(json.dumps(_rows(fresh)))
+    out = subprocess.run(
+        [sys.executable, str(GATE), "--baseline", str(b), "--fresh", str(f),
+         *extra], capture_output=True, text=True, cwd=ROOT)
+    return out.returncode, out.stdout + out.stderr
+
+
+def test_disappeared_baseline_row_warns(tmp_path):
+    code, out = run_gate(
+        tmp_path,
+        {"family_dense": 1000.0, "family_moe": 1000.0},
+        {"family_dense": 1000.0})
+    assert code == 0
+    assert "DISAPPEARED" in out and "family_moe" in out
+
+
+def test_empty_comparable_set_warns_verified_nothing(tmp_path):
+    """Every per-family baseline row vanished: the gate exits 0 (rows on
+    one side are informational by design) but must say it checked
+    NOTHING, not print a green 'rows within tolerance' line."""
+    code, out = run_gate(
+        tmp_path,
+        {"family_dense": 1000.0, "family_moe": 1000.0},
+        {"family_renamed": 1000.0})
+    assert code == 0
+    assert "verified nothing" in out
+    assert "DISAPPEARED" in out
+    assert "gate OK" not in out
+
+
+def test_empty_baseline_content_warns(tmp_path):
+    """A baseline FILE that parses to zero timed rows (truncated regen)
+    must warn and suppress the green OK line, like the disappeared case."""
+    code, out = run_gate(tmp_path, {}, {"family_dense": 1000.0})
+    assert code == 0
+    assert "verified nothing" in out
+    assert "gate OK" not in out
+
+
+def test_regression_still_fails(tmp_path):
+    code, out = run_gate(
+        tmp_path,
+        {"family_dense": 1000.0, "family_moe": 1000.0},
+        {"family_dense": 1000.0, "family_moe": 2000.0})
+    assert code == 1
+    assert "family_moe" in out
+
+
+def test_uniform_shift_passes(tmp_path):
+    code, out = run_gate(
+        tmp_path,
+        {"family_dense": 1000.0, "family_moe": 1000.0},
+        {"family_dense": 1900.0, "family_moe": 2000.0})
+    assert code == 0, out

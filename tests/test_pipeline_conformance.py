@@ -1,0 +1,227 @@
+"""Family x schedule x quant-feature conformance matrix for stage-sharded
+pipeline execution.
+
+Every cell runs ONE optimizer step of the TaxoNN engine twice — once as the
+single-device reverse scan (the reference) and once stage-sharded through
+``dist.pipeline`` on a 4-device "pipe" mesh — and asserts:
+
+  * the loss is BIT-EXACT (the pipeline's remat-per-layer primal runs the
+    same un-linearized forward the scan engine does), and
+  * every updated parameter agrees within 2e-6 (the backward re-linearizes
+    each layer at the forward's cached inputs; float reassociation across
+    the microbatch split is the only difference).
+
+The matrix is {dense, ssm, vlm, hybrid, encdec, moe} x {gpipe, 1f1b,
+interleaved} x {quant off, quant on, +stochastic rounding,
++quantize_updates, +compress_dw}.  Legs skip cleanly on hosts with fewer
+than 4 devices (the 4-device CI `pipeline-exec` job runs all 90 of them,
+under the kernel-backend and overlap modes of its matrix axes).
+
+The bit-exact contract applies to the kernel-off datapath.  Under
+``REPRO_KERNEL_BACKEND=int8`` the matrix still runs every leg but checks
+a datapath-appropriate bound instead: the int8 MXU absmax transport
+quantizes per tile and tile shapes follow call shapes, so splitting the
+batch into microbatches regroups rows into different absmax blocks — a
+property of the kernel datapath, independent of the pipeline.
+
+The learning rate is deliberately small (2e-3): stochastic rounding and
+the int8 dW codec amplify sub-ulp backward-fusion drift into one-grid-step
+jumps on unlucky elements, and the param tolerance must bound lr x jump.
+A systematic parity bug (wrong PRNG threading, missing shared-operand
+gradient, dropped aux seed) moves ~every quantized element and blows the
+tolerance by orders of magnitude regardless of lr.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import QuantPolicy, make_train_step
+from repro.core.steps import (default_bits, init_train_state,
+                              num_scan_units, pipeline_exec_capabilities)
+from repro.dist.pipeline import get_schedule
+from repro.launch.mesh import make_debug_mesh
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig
+from test_models import make_batch, tiny
+
+FAMILIES = ("dense", "ssm", "vlm", "hybrid", "encdec", "moe")
+SCHEDULES = (("gpipe", None), ("1f1b", None), ("interleaved", 2))
+# leg name -> (QuantPolicy kwargs, needs rng)
+QUANT_LEGS = {
+    "off": (dict(quantize_weights=False, quantize_acts=False,
+                 quantize_grads=False), False),
+    "on": (dict(grad_scale=16.0), False),
+    "stochastic": (dict(grad_scale=16.0, stochastic=True), True),
+    "quant_updates": (dict(grad_scale=16.0, quantize_updates=True), False),
+    "compress_dw": (dict(grad_scale=16.0, compress_dw=True), False),
+}
+S_PIPE, M_PIPE = 4, 4
+LR = 2e-3
+PARAM_TOL = 2e-6
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="pipeline conformance needs a 4-device pipe mesh")
+
+
+def _cfg(family):
+    """Tiny per-family config with exactly S_PIPE engine units."""
+    if family == "hybrid":
+        return tiny("hybrid", num_layers=2 * S_PIPE, attn_every=2)
+    return tiny(family, num_layers=S_PIPE)
+
+
+def _fixture(family, leg, kernel_backend, overlap):
+    cfg = _cfg(family)
+    assert num_scan_units(cfg) == S_PIPE
+    pol_kw, needs_rng = QUANT_LEGS[leg]
+    pol = QuantPolicy(**pol_kw, kernel_backend=kernel_backend,
+                      overlap=overlap)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=16)
+    ocfg = OptimizerConfig(kind="sgd")
+    hyper = Hyper(lr=jnp.float32(LR), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    bits = default_bits(cfg, enabled=pol.quantize_weights)
+    rng = jax.random.key(3) if needs_rng else None
+    return cfg, pol, params, batch, ocfg, hyper, state, bits, rng
+
+
+_REF_CACHE = {}
+
+
+def _reference(family, leg, kernel_backend, overlap):
+    """Single-device scan-engine step for this (family, quant leg)."""
+    key = (family, leg, kernel_backend, overlap)
+    if key not in _REF_CACHE:
+        (cfg, pol, params, batch, ocfg, hyper, state, bits,
+         rng) = _fixture(family, leg, kernel_backend, overlap)
+        step = jax.jit(make_train_step(cfg, pol, ocfg))
+        p, _, m = step(params, state, batch, hyper, bits, rng)
+        _REF_CACHE[key] = (jax.device_get(jax.tree.leaves(p)),
+                           float(m["loss"]), float(m["grad_norm"]))
+    return _REF_CACHE[key]
+
+
+@needs4
+@pytest.mark.parametrize("leg", sorted(QUANT_LEGS))
+@pytest.mark.parametrize("sched,virt",
+                         SCHEDULES, ids=[s for s, _ in SCHEDULES])
+@pytest.mark.parametrize("family", FAMILIES)
+def test_pipeline_conformance(family, sched, virt, leg, kernel_backend,
+                              overlap):
+    ref_leaves, ref_loss, ref_gnorm = _reference(family, leg,
+                                                 kernel_backend, overlap)
+    (cfg, pol, params, batch, ocfg, hyper, state, bits,
+     rng) = _fixture(family, leg, kernel_backend, overlap)
+    step = jax.jit(make_train_step(
+        cfg, pol, ocfg,
+        pipeline_schedule=get_schedule(sched, num_virtual=virt),
+        pipeline_stages=S_PIPE, num_microbatches=M_PIPE))
+    mesh = make_debug_mesh(1, 1, pipe=4)
+    with jax.set_mesh(mesh):
+        p, _, m = step(params, state, batch, hyper, bits, rng)
+    worst = max(float(jnp.abs(jnp.asarray(a) - jnp.asarray(b)).max())
+                for a, b in zip(ref_leaves, jax.tree.leaves(p)))
+    if kernel_backend == "off":
+        # the conformance contract: bit-exact loss, params to reassociation
+        assert float(m["loss"]) == ref_loss, (family, sched, leg)
+        assert worst < PARAM_TOL, (family, sched, leg, worst)
+        assert abs(float(m["grad_norm"]) - ref_gnorm) <= max(
+            1e-3, 1e-3 * ref_gnorm), (family, sched, leg)
+    else:
+        # int8 MXU datapath: the absmax transport quantizes per TILE, and
+        # tile shapes follow the call shapes — a microbatch matmul and the
+        # full-batch matmul group rows into different absmax blocks, so
+        # the datapath itself (not the pipeline) shifts values.  The CI
+        # int8 leg therefore checks a datapath-appropriate bound (absmax
+        # scale granularity ~ 1/127 per tile); the bit-exact contract is
+        # carried by the kernel-off legs of the tests matrix.
+        assert abs(float(m["loss"]) - ref_loss) <= 5e-3 * abs(ref_loss), (
+            family, sched, leg, float(m["loss"]), ref_loss)
+        assert worst < 1e-3, (family, sched, leg, worst)
+        assert abs(float(m["grad_norm"]) - ref_gnorm) <= max(
+            0.1, 0.1 * ref_gnorm), (family, sched, leg)
+
+
+# ---------------------------------------------------------------------------
+# capability detection: NO family/feature combination raises at build time
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leg", sorted(QUANT_LEGS))
+@pytest.mark.parametrize("family", FAMILIES)
+def test_no_family_feature_combination_raises(family, leg):
+    """Regression for the old allowlist: every family and every quant
+    feature (plus overlap) now BUILDS a pipelined train step; capability
+    detection reports full support."""
+    cfg = _cfg(family)
+    pol_kw, _ = QUANT_LEGS[leg]
+    for ov in ("off", "on"):
+        pol = QuantPolicy(**pol_kw, overlap=ov)
+        caps = pipeline_exec_capabilities(cfg, pol)
+        assert all(caps.values()), (family, leg, ov, caps)
+        step = make_train_step(cfg, pol, OptimizerConfig(),
+                               pipeline_schedule="1f1b",
+                               pipeline_stages=S_PIPE,
+                               num_microbatches=M_PIPE)
+        assert step.pipeline_schedule is not None
+
+
+def test_unknown_family_still_detected():
+    import dataclasses
+    cfg = dataclasses.replace(_cfg("dense"), family="dense")
+    caps = pipeline_exec_capabilities(cfg, QuantPolicy.off())
+    assert caps["family:dense"]
+    # an unknown family keys to False (capability DETECTION, not allowlist)
+    fake = dataclasses.replace(cfg)
+    object.__setattr__(fake, "family", "unobtainium")
+    caps = pipeline_exec_capabilities(fake, QuantPolicy.off())
+    assert not caps["family:unobtainium"]
+
+
+# ---------------------------------------------------------------------------
+# pipe axis composed with the data axis: dW reduced over "data" while the
+# stack executes stage-sharded (compress/overlap on and off)
+# ---------------------------------------------------------------------------
+
+@needs4
+@pytest.mark.parametrize("compress", [False, True], ids=["dense", "compressed"])
+@pytest.mark.parametrize("overlap_mode", ["off", "on"])
+def test_pipe_axis_composes_with_data_axis(compress, overlap_mode):
+    """Stage-sharded execution inside a shard_map over a 2-device "data"
+    axis, with each layer's dW all-reduced over it (blocking psum or the
+    one-deep overlapped ring, dense or int8-compressed): the result must
+    match the equivalent single-device scan run in the same shard_map."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    cfg = tiny("dense", num_layers=4)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=16)
+    ocfg = OptimizerConfig(kind="sgd")
+    bits = default_bits(cfg, enabled=False)
+    hyper = Hyper(lr=jnp.float32(0.01), step=jnp.int32(0))
+    state = init_train_state(params, ocfg)
+    mesh = jax.make_mesh((2,), ("data",))
+
+    def run(pipe):
+        pol = QuantPolicy(quantize_weights=False, quantize_acts=False,
+                          quantize_grads=False, kernel_backend="off",
+                          compress_dw=compress, dw_psum_axes=("data",),
+                          dw_num_replicas=2, overlap=overlap_mode)
+        kw = (dict(pipeline_schedule="1f1b", pipeline_stages=4,
+                   num_microbatches=4) if pipe else {})
+        step = make_train_step(cfg, pol, ocfg, **kw)
+        f = jax.shard_map(lambda p, s, b: step(p, s, b, hyper, bits),
+                          mesh=mesh, in_specs=(P(), P(), P("data")),
+                          out_specs=(P(), P(), P()), check_vma=False)
+        return jax.jit(f)(params, state, batch)
+
+    p_scan, _, m_scan = run(pipe=False)
+    p_pipe, _, m_pipe = run(pipe=True)
+    assert float(m_scan["loss"]) == float(m_pipe["loss"])
+    worst = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(p_scan),
+                                jax.tree.leaves(p_pipe)))
+    assert worst < 1e-5, (compress, overlap_mode, worst)
+    assert np.isfinite(float(m_pipe["grad_norm"]))

@@ -200,8 +200,10 @@ def test_train_step_threads_pipeline_metrics():
 
 
 def test_pipeline_execution_build_time_validation():
-    """Indivisible layer counts and unsupported families/policy flags fail
-    at step-build time with clear errors."""
+    """Indivisible layer counts still fail at step-build time; the former
+    family/feature allowlist is gone — every family and every QuantPolicy
+    feature now BUILDS (capability detection, exercised exhaustively in
+    tests/test_pipeline_conformance.py)."""
     from repro.core import QuantPolicy, make_train_step
     from repro.optim import OptimizerConfig
     from test_models import tiny
@@ -211,20 +213,17 @@ def test_pipeline_execution_build_time_validation():
         make_train_step(tiny("dense", num_layers=3), QuantPolicy.off(), ocfg,
                         pipeline_schedule="1f1b", pipeline_stages=2,
                         num_microbatches=4)
-    with pytest.raises(NotImplementedError, match="shared-operand"):
-        make_train_step(tiny("hybrid"), QuantPolicy.off(), ocfg,
-                        pipeline_schedule="gpipe", pipeline_stages=2,
-                        num_microbatches=4)
-    with pytest.raises(NotImplementedError, match="compress_dw"):
-        make_train_step(tiny("dense", num_layers=4),
-                        QuantPolicy(compress_dw=True), ocfg,
-                        pipeline_schedule="1f1b", pipeline_stages=2,
-                        num_microbatches=4)
-    with pytest.raises(NotImplementedError, match="overlap"):
-        make_train_step(tiny("dense", num_layers=4),
-                        QuantPolicy(overlap="on"), ocfg,
-                        pipeline_schedule="1f1b", pipeline_stages=2,
-                        num_microbatches=4)
+    # formerly NotImplementedError: hybrid (shared attn), compress_dw,
+    # overlap="on" — all supported since the shared-operand story landed
+    for cfg, pol in (
+            (tiny("hybrid"), QuantPolicy.off()),
+            (tiny("dense", num_layers=4), QuantPolicy(compress_dw=True)),
+            (tiny("dense", num_layers=4), QuantPolicy(overlap="on")),
+            (tiny("encdec", num_layers=4), QuantPolicy(stochastic=True)),
+            (tiny("moe", num_layers=4), QuantPolicy(quantize_updates=True))):
+        step = make_train_step(cfg, pol, ocfg, pipeline_schedule="gpipe",
+                               pipeline_stages=2, num_microbatches=4)
+        assert step.pipeline_schedule is not None
 
 
 # ---------------------------------------------------------------------------

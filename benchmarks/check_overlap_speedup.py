@@ -1,0 +1,84 @@
+"""Hard overlap gate: the measured ``overlap=on`` step must be a WIN.
+
+    python benchmarks/check_overlap_speedup.py --fresh BENCH_overlap.fresh.json
+
+Reads the fresh overlap-suite JSON and fails (exit 1) when the
+``overlap/step_walltime_on`` row's ``speedup`` (= t_off / t_on, measured
+in the same run) is not above the threshold — the successor of the old
+``overlap_fraction``-based check, which only proved the compiler
+SCHEDULED compute into the collective windows, not that the schedule paid
+off.  A 0.87x "overlap" is a regression, not a tuning artifact; this gate
+makes it fail loudly.
+
+Runner escape hatches, both explicit in the output:
+
+  * fewer than ``--min-devices`` devices in the recorded row (single-
+    device CI shards, laptops): the ring/psum tradeoff is not measurable,
+    so the gate WARNS and exits 0 instead of failing — same warn-only
+    stance as ``check_regression.py``'s missing-baseline path
+  * a fresh file with no ``step_walltime_on`` row at all is an error:
+    the suite silently not emitting the row must not read as a pass
+
+``--min-speedup`` defaults to 1.0; REPRO_OVERLAP_MIN_SPEEDUP overrides
+it (CI escape hatch, mirroring REPRO_BENCH_TOLERANCE).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def find_row(rows: list, name: str):
+    for r in rows:
+        if r.get("name") == name:
+            return r
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="fresh overlap-suite JSON (benchmarks.run --json)")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required overlap-on speedup t_off/t_on "
+                         "(default 1.0: overlap must not lose)")
+    ap.add_argument("--min-devices", type=int, default=4,
+                    help="below this device count the gate warns instead "
+                         "of failing (transport tradeoff not measurable)")
+    args = ap.parse_args(argv)
+    min_speedup = float(os.environ.get("REPRO_OVERLAP_MIN_SPEEDUP",
+                                       args.min_speedup))
+
+    with open(args.fresh) as f:
+        rows = json.load(f)
+    row = find_row(rows, "overlap/step_walltime_on")
+    if row is None:
+        print("error: no overlap/step_walltime_on row in the fresh run — "
+              "the overlap suite did not produce the gated measurement")
+        return 1
+    speedup = row.get("speedup")
+    n_dev = int(row.get("n_devices", 0))
+    if speedup is None:
+        print("error: overlap/step_walltime_on row carries no speedup "
+              "field — cannot gate")
+        return 1
+    if n_dev < args.min_devices:
+        print(f"warning: overlap speedup gate ran on {n_dev} device(s) "
+              f"(< {args.min_devices}) — speedup x{speedup:.3f} recorded "
+              f"but NOT gated (transport tradeoff needs a device group)")
+        return 0
+    if speedup < min_speedup:
+        print(f"FAIL overlap/step_walltime_on: speedup x{speedup:.3f} < "
+              f"x{min_speedup:.2f} on {n_dev} devices — overlap=on is a "
+              f"measured slowdown (transport autotuner or pipeline depth "
+              f"regressed)")
+        return 1
+    print(f"overlap speedup gate OK: x{speedup:.3f} >= x{min_speedup:.2f} "
+          f"on {n_dev} devices")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,9 +50,17 @@ def load_rows(path: str) -> dict:
 
 def check(baseline: dict, fresh: dict, tolerance: float,
           min_us: float) -> list:
-    """Return [(key, base_us, fresh_us, ratio, limit)] for failing rows."""
+    """Return [(key, base_us, fresh_us, ratio, limit)] for failing rows.
+
+    Rows with a non-positive baseline are skipped UNCONDITIONALLY, not
+    just via the --min-us floor: non-timing rows (the hlo_overlap_fraction
+    and speedup rows report us_per_call 0.0 by convention) must never
+    enter the ratio math, where a 0.0 baseline is a divide-by-zero that a
+    --min-us 0 run would otherwise trip.
+    """
     comparable = {k: (baseline[k], fresh[k]) for k in baseline.keys() & fresh
-                  if baseline[k] >= min_us and fresh[k] > 0}
+                  if baseline[k] > 0 and baseline[k] >= min_us
+                  and fresh[k] > 0}
     if not comparable:
         return []
     ratios = {k: f / b for k, (b, f) in comparable.items()}
@@ -104,7 +112,7 @@ def main(argv=None) -> int:
 
     failures = check(baseline, fresh, tol, args.min_us)
     n_cmp = len([k for k in baseline.keys() & fresh.keys()
-                 if baseline[k] >= args.min_us])
+                 if baseline[k] > 0 and baseline[k] >= args.min_us])
     if baseline and not n_cmp:
         # an empty comparable set means the gate verified NOTHING; today
         # that is a warning (rows on one side are informational by

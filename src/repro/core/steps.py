@@ -192,7 +192,7 @@ def pipeline_exec_capabilities(cfg: ModelConfig,
         "stochastic": True,        # per-(layer, batch-row) PRNG threading
         "quantize_updates": True,  # inside the vmapped/overlapped update
         "compress_dw": True,       # per-layer codec in the update tail
-        "overlap": True,           # one-deep pipelined ring over dw axes
+        "overlap": True,           # depth-pipelined reduce over dw axes
     }
 
 
@@ -428,15 +428,28 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                     pipeline_schedule=None,
                     pipeline_stages: Optional[int] = None,
                     num_microbatches: Optional[int] = None,
-                    overlap: Optional[str] = None):
+                    overlap: Optional[str] = None,
+                    transport: Optional[str] = None):
     """``kernel_backend`` overrides ``policy.kernel_backend`` ("off" |
     "emulate" | "int8" | "auto"; auto = off on CPU, int8 on TPU) and selects
     the datapath for the dense-unit matmuls in the step's hot loops.
 
     ``overlap`` ("off" | "on") overrides ``policy.overlap``: with "on" the
     engine's backward scan software-pipelines each layer's dW all-reduce
-    one scan step deep (start at layer i, wait while layer i-1 computes —
-    see ``core.taxonn.backward_stack`` / ``dist.async_collectives``).
+    ``policy.overlap_depth`` scan steps deep (start at layer i, wait while
+    the next ``depth`` layers compute — see ``core.taxonn.backward_stack``
+    / ``dist.async_collectives``).
+
+    ``transport`` ("auto" | "ring" | "psum" | "scatter") overrides
+    ``policy.dw_transport``: which wire the overlapped dW reduce rides —
+    "auto" asks the per-bucket transport autotuner
+    (``dist.async_collectives.decide_transport``; ``REPRO_TRANSPORT``
+    forces it globally), "ring" the chunked ppermute ring, "psum" the
+    fused blocking collective, "scatter" the reduce-scatter +
+    sharded-update + all-gather path (dense SGD only; degrades to psum
+    otherwise).  Prime the autotuner's measured decisions BEFORE tracing
+    via ``dist.async_collectives.prime_transport_cache``; inside the
+    trace it falls back to cached decisions or a platform model.
 
     ``pipeline_schedule`` ("gpipe" | "1f1b" | "interleaved" or a
     ``repro.dist.pipeline.Schedule``) declares the pipeline schedule this
@@ -455,6 +468,11 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         if overlap not in ("off", "on"):
             raise ValueError(f"overlap must be 'off' or 'on', got {overlap!r}")
         policy = dataclasses.replace(policy, overlap=overlap)
+    if transport is not None:
+        if transport not in ("auto", "ring", "psum", "scatter"):
+            raise ValueError(f"transport must be 'auto', 'ring', 'psum' or "
+                             f"'scatter', got {transport!r}")
+        policy = dataclasses.replace(policy, dw_transport=transport)
     optim_cfg = optim_cfg or OptimizerConfig()
     backend = resolve_backend(
         kernel_backend if kernel_backend is not None

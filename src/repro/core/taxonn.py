@@ -31,7 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.dist.async_collectives import (tree_all_reduce_start,
+from repro.dist.async_collectives import (all_gather_chunks, group_size,
+                                          reduce_scatter_chunk,
+                                          resolve_leaf_transports,
+                                          shard_chunk,
+                                          tree_all_reduce_start,
                                           tree_all_reduce_wait)
 from repro.dist.collectives import compressed_psum
 from repro.optim import OptimizerConfig, Hyper, apply_update
@@ -81,6 +85,16 @@ class QuantPolicy:
     # Ring-group size override for the overlapped reduce (None = resolve
     # from the ambient mesh at trace time).
     dw_num_replicas: Optional[int] = None
+    # Software-pipeline depth of the overlapped reduce: layer i STARTS its
+    # dW all-reduce and the wait lands ``overlap_depth`` scan steps later,
+    # keeping that many collectives in flight (clamped to the layer count).
+    # Depth 2 gives a ring's hops two layers' compute to hide behind.
+    overlap_depth: int = 2
+    # Transport for the overlapped dW reduce: "auto" (per-bucket autotuner,
+    # dist.async_collectives.decide_transport; REPRO_TRANSPORT overrides),
+    # "ring" (chunked ppermute), or "psum" (fused blocking collective at
+    # start — one rendezvous per layer — with a free wait).
+    dw_transport: str = "auto"
 
     @staticmethod
     def off() -> "QuantPolicy":
@@ -259,26 +273,149 @@ def forward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
 # Backward: the G-chain reverse scan with fused per-layer update
 # ---------------------------------------------------------------------------
 
+def overlap_depth_for(policy: QuantPolicy, n_units: int) -> int:
+    """Effective pipeline depth: ``policy.overlap_depth`` clamped to the
+    layer count (a 2-layer stack can keep at most 2 reduces in flight)."""
+    depth = int(policy.overlap_depth)
+    if depth < 1:
+        raise ValueError(
+            f"QuantPolicy.overlap_depth must be >= 1, got {depth}")
+    return min(depth, int(n_units))
+
+
+def _dw_leaf_transports(policy: QuantPolicy, stacked: PyTree) -> list:
+    """STATIC per-leaf transport decisions for one layer's dW tree (the
+    [1:] slice shapes of ``stacked``, reduced as f32 like ``_vjp_layer``
+    emits them).  Plain strings, so the overlapped paths can shape their
+    program around them at trace time: ``"ring"`` leaves have genuinely
+    in-flight hops worth deferring ``overlap_depth`` iterations, while
+    blocking transports (``"psum"``/``"scatter"``) complete at start and
+    get a same-iteration update."""
+    slices = [jax.ShapeDtypeStruct(a.shape[1:], jnp.float32)
+              for a in jax.tree.leaves(stacked)]
+    return resolve_leaf_transports(
+        slices, policy.dw_psum_axes, compressed=policy.compress_dw,
+        num_replicas=policy.dw_num_replicas, transport=policy.dw_transport)
+
+
+def _make_blocking_layer_update(policy: QuantPolicy, hyper: Hyper,
+                                optim_cfg: OptimizerConfig, enabled: Array,
+                                decisions: list):
+    """Per-layer reduce + quantize + update when every dW leaf rides a
+    BLOCKING transport (no ring hops to hide): the update lands in the
+    same scan iteration, so the overlapped scan carries no pending state.
+
+    Two refinements over the blocking off-path body make ``overlap=on``
+    a measured win even where nothing can truly overlap (host-CPU device
+    groups):
+
+      * psum-decided leaves are FUSED into one variadic ``lax.psum`` —
+        one rendezvous per layer instead of one per leaf;
+      * scatter-decided leaves get the ZeRO-style SHARDED update when the
+        optimizer is elementwise (sgd, no grad clip): reduce-scatter the
+        dW leaf, run quantize-update + optimizer on this device's 1/g
+        chunk only, and all-gather the UPDATED params — same wire bytes,
+        1/g the update traffic (measured ~1.7x per leaf at dW sizes).
+        Elementwise math on identical chunk values keeps the result
+        within reduction-order reassociation of the fused psum path.
+
+    The sharded leaves' grad-norm contribution is device-local (each
+    device squares only its chunk), so callers must close the step with
+    ``gsq += lax.psum(gsq_sharded, axes)`` — returned flag says whether
+    that collective is needed.  Returns ``(update_layer, uses_sharded)``
+    where ``update_layer(p_l, dW, opt_l, b_l, key) -> (new_p, new_opt,
+    gsq, gsq_sharded)``.
+    """
+    axes = tuple(policy.dw_psum_axes)
+    axis = axes if len(axes) > 1 else (axes[0] if axes else None)
+    g = group_size(axes, policy.dw_num_replicas) if axes else 1
+    # sharded-update eligibility is static: the optimizer and the update
+    # quantizer must be elementwise so chunk results equal full-tensor
+    # results per element (momentum8's rowwise absmax, the per-leaf clip
+    # norm, and positional stochastic-rounding noise are not)
+    sharded_ok = (bool(axes) and g > 1 and optim_cfg.kind == "sgd"
+                  and optim_cfg.grad_clip == 0
+                  and not policy.compress_dw
+                  and not (policy.quantize_updates and policy.stochastic))
+    sharded = [d == "scatter" and sharded_ok for d in decisions]
+    uses_sharded = any(sharded)
+
+    def update_layer(p_l, dW, opt_l, b_l, key):
+        def qu(gg):
+            return quantize_update(gg, b_l, key, enabled, policy, hyper)
+        zero = jnp.float32(0.0)
+        if not uses_sharded:
+            # one fused blocking reduce + whole-tree update: the off
+            # path's numerics, any optimizer
+            leaves, treedef = jax.tree.flatten(dW)
+            if policy.compress_dw:
+                leaves = [compressed_psum(x, axes,
+                                          num_replicas=policy.dw_num_replicas)
+                          for x in leaves]
+            elif axes:
+                leaves = list(lax.psum(tuple(leaves), axes))
+            leaves = [qu(x) for x in leaves]
+            dWq = jax.tree.unflatten(treedef, leaves)
+            new_p, new_opt = apply_update(p_l, dWq, opt_l, hyper, optim_cfg)
+            gsq = sum(jnp.sum(jnp.square(x)) for x in leaves)
+            return new_p, new_opt, gsq, zero
+        p_leaves, ptd = jax.tree.flatten(p_l)
+        g_leaves = jax.tree.leaves(dW)
+        fuse = [i for i, s in enumerate(sharded) if not s]
+        red = {}
+        if fuse:
+            reduced = (lax.psum(tuple(g_leaves[i] for i in fuse), axes)
+                       if axes else [g_leaves[i] for i in fuse])
+            red = dict(zip(fuse, reduced))
+        new_leaves: list = [None] * len(p_leaves)
+        gsq, gsq_sh = zero, zero
+        for i, (pw, gw) in enumerate(zip(p_leaves, g_leaves)):
+            if sharded[i]:
+                chunk = qu(reduce_scatter_chunk(gw, axis, g))
+                own = shard_chunk(pw, axis, g)
+                new_chunk, _ = apply_update(own, chunk, {}, hyper, optim_cfg)
+                new_leaves[i] = all_gather_chunks(new_chunk, axis, g,
+                                                 tuple(pw.shape), pw.dtype)
+                gsq_sh = gsq_sh + jnp.sum(jnp.square(chunk))
+            else:
+                gq = qu(red[i])
+                new_leaves[i], _ = apply_update(pw, gq, {}, hyper, optim_cfg)
+                gsq = gsq + jnp.sum(jnp.square(gq))
+        # sgd is stateless (sharded_ok implies it): opt_l passes through
+        return jax.tree.unflatten(ptd, new_leaves), opt_l, gsq, gsq_sh
+
+    return update_layer, uses_sharded
+
+
 def _overlapped_update_helpers(policy: QuantPolicy, hyper: Hyper,
                                optim_cfg: OptimizerConfig, enabled: Array,
-                               key_for: Callable):
-    """Scaffolding of the one-deep software-pipelined per-layer dW reduce,
-    shared by the overlapped backward scan and the stacked update tail
-    (``apply_stacked_updates``) so the subtlest pieces exist exactly once:
+                               key_for: Callable, depth: int):
+    """Scaffolding of the ``depth``-deep software-pipelined per-layer dW
+    reduce, shared by the overlapped backward scan and the stacked update
+    tail (``apply_stacked_updates``) so the subtlest pieces exist exactly
+    once.  The carry holds a tuple of ``depth`` pending entries, OLDEST
+    first; each scan step starts one reduce and finalizes the oldest, so a
+    layer's collective has ``depth`` layers' compute to hide behind:
 
-    ``start``     issue a layer's ring all-reduce (dense or compressed)
-    ``finalize``  wait on the in-flight handle, update-quantize, land the
+    ``start``     issue a layer's all-reduce (dense or compressed, with the
+                  policy's transport — autotuned by default)
+    ``finalize``  wait on one in-flight entry, update-quantize, land the
                   delayed optimizer step; returns (new_p, new_opt, gsq)
-    ``pending0``  warm-up carry: zero slices + a dummy handle (no hops)
-    ``align``     undo the reverse scan's one-slot lag — ys slot i holds
-                  the FINALIZED layer i+1 (slot n-1 the warm-up dummy) and
-                  the drained layer 0 is prepended
+    ``pending0``  warm-up carry: ``depth`` zero-slice entries with dummy
+                  handles (no hops; finalizing one is a no-op update)
+    ``drain``     finalize the ``depth`` entries still in flight after the
+                  scan (oldest first); returns (flushes, gsq_sum)
+    ``align``     undo the reverse scan's ``depth``-slot lag — ys slot i
+                  holds the FINALIZED layer i+depth (the top ``depth``
+                  slots warm-up garbage) and the drained layers
+                  depth-1..0 are prepended in layer order
     """
     def start(dW, dummy=False):
         return tree_all_reduce_start(dW, policy.dw_psum_axes,
                                      compressed=policy.compress_dw,
                                      num_replicas=policy.dw_num_replicas,
-                                     dummy=dummy)
+                                     dummy=dummy,
+                                     transport=policy.dw_transport)
 
     def finalize(pending):
         dW = tree_all_reduce_wait(pending["h"])
@@ -296,16 +433,29 @@ def _overlapped_update_helpers(policy: QuantPolicy, hyper: Hyper,
             lambda a: jnp.zeros(a.shape[1:], dtype or a.dtype), tree)
 
     def pending0(stacked, opt_stacked, bits_xs):
-        return {"p": slice0(stacked), "opt": slice0(opt_stacked),
-                "h": start(slice0(stacked, jnp.float32), dummy=True),
-                "bits": slice0(bits_xs), "idx": jnp.int32(0)}
+        entry = {"p": slice0(stacked), "opt": slice0(opt_stacked),
+                 "h": start(slice0(stacked, jnp.float32), dummy=True),
+                 "bits": slice0(bits_xs), "idx": jnp.int32(0)}
+        return (entry,) * depth
 
-    def align(flush, ys):
+    def drain(pending):
+        flushes, gsq = [], jnp.float32(0.0)
+        for entry in pending:       # oldest first: layers depth-1 .. 0
+            new_p, new_opt, ginc = finalize(entry)
+            flushes.append((new_p, new_opt))
+            gsq = gsq + ginc
+        return flushes, gsq
+
+    def align(flushes, ys):
+        # flushes arrive finalize-order (layer depth-1 first); stack them
+        # in LAYER order and prepend to the ys slots that hold real layers
+        stackf = jax.tree.map(lambda *fs: jnp.stack(list(fs)),
+                              *reversed(flushes))
         return jax.tree.map(
-            lambda f, y: jnp.concatenate([f[None], y[:-1]], axis=0),
-            flush, ys)
+            lambda f, y: jnp.concatenate([f, y[:-depth]], axis=0),
+            stackf, ys)
 
-    return start, finalize, pending0, align
+    return start, finalize, pending0, drain, align
 
 
 def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
@@ -323,14 +473,23 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
       4. W_i <- W_i - lr * dW_i  (fused update; DP all-reduce of dW_i is
          inside this scan body -> overlapped with step i-1's compute)
 
-    With ``policy.overlap == "on"`` step 4 is software-pipelined one scan
-    step deep: layer i STARTS its dW all-reduce (a bucketed ppermute ring,
-    dense or compressed — dist.async_collectives) and the update lands when
-    the NEXT iteration (processing layer i-1) waits on the handle riding in
-    the carry, so the collective's hops overlap layer i-1's VJP/G-step
-    compute.  The last in-flight layer is flushed after the scan.  With no
-    ``dw_psum_axes`` the handle degrades to the identity and the overlapped
-    scan computes bit-identical results — a pure schedule change.
+    With ``policy.overlap == "on"`` step 4's strategy follows the STATIC
+    per-leaf transport decisions (``policy.dw_transport`` — autotuned by
+    default, dist.async_collectives).  Ring-decided leaves have genuinely
+    in-flight hops, so the whole layer tree is software-pipelined
+    ``policy.overlap_depth`` scan steps deep: layer i STARTS its dW
+    all-reduce and the update lands ``depth`` iterations later, the
+    handles riding in the carry, so each collective overlaps ``depth``
+    layers' VJP/G-step compute; the last ``depth`` in-flight layers are
+    flushed after the scan.  When every leaf rides a BLOCKING transport
+    (fused psum / native reduce-scatter) the reduce completes at start,
+    so the update lands in the SAME iteration — one fused rendezvous per
+    layer, and scatter-decided leaves run the optimizer on their 1/g
+    chunk before all-gathering the updated params (the sharded update
+    that makes ``overlap=on`` a measured win even on host-CPU groups
+    where nothing can truly overlap).  With no ``dw_psum_axes`` both
+    shapes degrade to the blocking one-device scan and the overlapped
+    path computes bit-identical results — a pure schedule change.
 
     Gradient-scale convention: ``G_out`` arrives SCALED by policy.grad_scale
     (loss scaling for the low-bit chain).  dW is un-scaled just before the
@@ -408,8 +567,44 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         return G_in, new_stacked, new_opt, dshared, gsq
 
     # ---- communication-overlapped software pipeline ----------------------
-    _start, _finalize, _pending0, _align = _overlapped_update_helpers(
-        policy, hyper, optim_cfg, enabled, _key_for)
+    decisions = _dw_leaf_transports(policy, stacked)
+    if "ring" not in decisions:
+        # every dW leaf rides a BLOCKING transport: its reduce completes
+        # at start, so deferring the update `depth` iterations buys no
+        # overlap and only pays for it (pending-carry rotation, dummy
+        # warm-up finalizes, drain realignment — measured ~10% of step
+        # walltime).  Land each layer's update in the SAME iteration with
+        # the fused-psum / sharded-scatter strategies instead.
+        _update_layer, uses_sharded = _make_blocking_layer_update(
+            policy, hyper, optim_cfg, enabled, decisions)
+
+        def bwd(carry, xs):
+            G, dshared_acc, gsq, gsq_sh = carry
+            p_l, opt_l, x_l, b_l, idx = xs
+            dW, dS, dX = _vjp_layer(G, p_l, x_l, b_l)
+            key = _key_for(idx)
+            G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled,
+                                 policy, key)
+            new_p, new_opt, ginc, ginc_sh = _update_layer(
+                p_l, dW, opt_l, b_l, key)
+            dshared_acc = jax.tree.map(
+                lambda a, d: a + d.astype(jnp.float32), dshared_acc, dS)
+            return (G_next, dshared_acc, gsq + ginc, gsq_sh + ginc_sh), \
+                (new_p, new_opt)
+
+        xs = (stacked, opt_stacked, caches, _bits_xs(bits),
+              jnp.arange(n_units, dtype=jnp.int32))
+        (G_in, dshared, gsq, gsq_sh), (new_stacked, new_opt) = xscan(
+            bwd, (G_out, shared_f32, jnp.float32(0.0), jnp.float32(0.0)),
+            xs, reverse=True)
+        if uses_sharded:
+            # sharded leaves squared only this device's chunk
+            gsq = gsq + lax.psum(gsq_sh, policy.dw_psum_axes)
+        return G_in, new_stacked, new_opt, dshared, gsq
+
+    depth = overlap_depth_for(policy, n_units)
+    _start, _finalize, _pending0, _drain, _align = _overlapped_update_helpers(
+        policy, hyper, optim_cfg, enabled, _key_for, depth)
 
     def bwd(carry, xs):
         G, dshared_acc, gsq, pending = carry
@@ -417,12 +612,12 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         dW, dS, dX = _vjp_layer(G, p_l, x_l, b_l)
         G_next = _quant_grad(dX, b_l["g_i"], b_l["g_f"], enabled, policy,
                              _key_for(idx))
-        # start layer i's reduce; land layer i+1's (its hops overlapped
-        # THIS iteration's VJP compute above)
+        # start layer i's reduce; land layer i+depth's (its hops overlapped
+        # the last `depth` iterations' VJP compute)
         handles = _start(dW)
-        fin_p, fin_opt, gsq_inc = _finalize(pending)
-        pending_new = {"p": p_l, "opt": opt_l, "h": handles, "bits": b_l,
-                       "idx": idx}
+        fin_p, fin_opt, gsq_inc = _finalize(pending[0])
+        pending_new = pending[1:] + ({"p": p_l, "opt": opt_l, "h": handles,
+                                      "bits": b_l, "idx": idx},)
         dshared_acc = jax.tree.map(
             lambda a, d: a + d.astype(jnp.float32), dshared_acc, dS)
         return (G_next, dshared_acc, gsq + gsq_inc, pending_new), \
@@ -434,10 +629,10 @@ def backward_stack(body_fn: Callable, stacked: PyTree, shared: PyTree,
         bwd, (G_out, shared_f32, jnp.float32(0.0),
               _pending0(stacked, opt_stacked, _bits_xs(bits))), xs,
         reverse=True)
-    # drain: layer 0's reduce is still in flight after the scan
-    flush_p, flush_opt, gsq_f = _finalize(pending)
-    return (G_in, _align(flush_p, fin_stacked), _align(flush_opt, fin_opt),
-            dshared, gsq + gsq_f)
+    # drain: layers depth-1..0's reduces are still in flight after the scan
+    flushes, gsq_f = _drain(pending)
+    return (G_in, _align([f[0] for f in flushes], fin_stacked),
+            _align([f[1] for f in flushes], fin_opt), dshared, gsq + gsq_f)
 
 
 # ---------------------------------------------------------------------------
@@ -461,11 +656,14 @@ def apply_stacked_updates(stacked: PyTree, dW: PyTree, opt_stacked: PyTree,
     ``q(alpha*dW)``), then the optimizer.
 
     ``policy.overlap == "off"``: one vmap over the layer axis.
-    ``policy.overlap == "on"``: a reverse scan whose per-layer ring reduce
-    is software-pipelined one step deep (start layer i's reduce, land layer
-    i+1's while its hops overlap this step's update compute), identical in
-    structure to the overlapped backward scan; with no ``dw_psum_axes``
-    the handles are identities and the results are bitwise equal to the
+    ``policy.overlap == "on"``: identical in structure to the overlapped
+    backward scan — ring-decided leaves ride a reverse scan whose
+    per-layer reduce is software-pipelined ``policy.overlap_depth`` steps
+    deep (start layer i's reduce, land layer i+depth's while its hops
+    overlap this step's update compute); when every leaf's transport is
+    blocking the updates land same-iteration with the fused-psum /
+    sharded-scatter strategies instead.  With no ``dw_psum_axes`` the
+    reduces are identities and the results are bitwise equal to the
     vmapped path.
 
     Returns ``(new_stacked, new_opt, grad_sq_sum)``.
@@ -500,16 +698,39 @@ def apply_stacked_updates(stacked: PyTree, dW: PyTree, opt_stacked: PyTree,
                                            idxs)
         return new_p, new_s, jnp.sum(gsqs)
 
-    _start, _finalize, _pending0, _align = _overlapped_update_helpers(
-        policy, hyper, optim_cfg, enabled, _key_for)
+    decisions = _dw_leaf_transports(policy, stacked)
+    if "ring" not in decisions:
+        # all-blocking transports: same-iteration updates (see
+        # backward_stack) — a reverse scan to keep the layer-major
+        # collective order identical to the overlapped backward scan
+        _update_layer, uses_sharded = _make_blocking_layer_update(
+            policy, hyper, optim_cfg, enabled, decisions)
+
+        def body(carry, xs):
+            gsq, gsq_sh = carry
+            p_l, g_l, s_l, b_l, idx = xs
+            new_p, new_s, ginc, ginc_sh = _update_layer(
+                p_l, g_l, s_l, b_l, _key_for(idx))
+            return (gsq + ginc, gsq_sh + ginc_sh), (new_p, new_s)
+
+        xs = (stacked, dW, opt_stacked, bxs, idxs)
+        (gsq, gsq_sh), (new_p, new_s) = xscan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), xs, reverse=True)
+        if uses_sharded:
+            gsq = gsq + lax.psum(gsq_sh, policy.dw_psum_axes)
+        return new_p, new_s, gsq
+
+    depth = overlap_depth_for(policy, n_units)
+    _start, _finalize, _pending0, _drain, _align = _overlapped_update_helpers(
+        policy, hyper, optim_cfg, enabled, _key_for, depth)
 
     def body(carry, xs):
         gsq, pending = carry
         p_l, g_l, s_l, b_l, idx = xs
         handles = _start(g_l)
-        fin_p, fin_s, ginc = _finalize(pending)
-        pending_new = {"p": p_l, "opt": s_l, "h": handles, "bits": b_l,
-                       "idx": idx}
+        fin_p, fin_s, ginc = _finalize(pending[0])
+        pending_new = pending[1:] + ({"p": p_l, "opt": s_l, "h": handles,
+                                      "bits": b_l, "idx": idx},)
         return (gsq + ginc, pending_new), (fin_p, fin_s)
 
     xs = (stacked, dW, opt_stacked, bxs, idxs)
@@ -517,5 +738,6 @@ def apply_stacked_updates(stacked: PyTree, dW: PyTree, opt_stacked: PyTree,
         body, (jnp.float32(0.0), _pending0(stacked, opt_stacked, bxs)), xs,
         reverse=True)
     # drain + re-align exactly like the overlapped backward scan above
-    flush_p, flush_s, gsq_f = _finalize(pending)
-    return _align(flush_p, fin_p), _align(flush_s, fin_s), gsq + gsq_f
+    flushes, gsq_f = _drain(pending)
+    return (_align([f[0] for f in flushes], fin_p),
+            _align([f[1] for f in flushes], fin_s), gsq + gsq_f)

@@ -30,7 +30,11 @@ consumer is the next iteration's wait, so it counts as overlapped by
 construction.  A collective with at least one real compute op
 (dot/fusion/while/elementwise — not parameters, tuples, data-movement
 fusions or other collectives) inside its window — or a loop-carried one —
-counts as overlapped; the fraction is overlapped / total.  This is the
+counts as overlapped; the fraction is overlapped / total.  A chained ring
+(hop permutes joined by accumulate adds) is ONE logical collective: the
+chain-head's chase absorbs the downstream hops, so a g-device bucketed
+ring and a lone fused psum are comparable units instead of the hop count
+swamping the denominator.  This is the
 measured counterpart of the overlapped backward scan
 (``core.taxonn.backward_stack(overlap="on")``): the ring hops it issues at
 layer i are only worth their bytes if layer i-1's VJP work lands between
@@ -220,12 +224,34 @@ _CARRY_CHAIN_TOKENS = _MOVE_TOKENS | {"add", "collective-permute"}
 def _is_carry_chain(opcode: str, name: str) -> bool:
     if _is_data_movement(opcode, name):
         return True
-    if opcode in ("add", "collective-permute"):
+    if opcode in ("add", "collective-permute", "collective-permute-start",
+                  "collective-permute-done"):
         return True
     if opcode != "fusion":
         return False
     base = name.split(".")[0]
     return all(tok in _CARRY_CHAIN_TOKENS for tok in base.split("_") if tok)
+
+
+def _base_opcode(opcode: str) -> str:
+    for suffix in ("-start", "-done"):
+        if opcode.endswith(suffix):
+            return opcode[: -len(suffix)]
+    return opcode
+
+
+# a permute hop's ring signature: its source_target_pairs plus payload size.
+# Every hop of one bucketed ring shares both (the perm is fixed and the
+# chunk shape constant across phases), while unrelated permutes in the same
+# module — pipeline stage boundaries, halo exchanges — differ in at least
+# one, so the signature is what lets the backward chase absorb hops even
+# after XLA fuses the accumulate adds with real compute.
+_PAIRS_RE = re.compile(r"source_target_pairs=(\S+?\}\})")
+
+
+def _permute_sig(line: str):
+    m = _PAIRS_RE.search(line)
+    return (m.group(1) if m else "", _payload_bytes(line))
 
 
 def _is_compute_opcode(opcode: str, name: str = "") -> bool:
@@ -252,16 +278,55 @@ def overlap_fraction(hlo_text: str) -> Dict:
     ops = []                      # (line_idx, name, opcode)
     uses: Dict[str, list] = {}    # operand name -> ascending use-line idxs
     defs_by_line: Dict[int, tuple] = {}
+    defs_by_name: Dict[str, list] = {}   # name -> ascending def-line idxs
+    operands_by_line: Dict[int, list] = {}
     for idx, line in enumerate(lines):
         m = _ANY_OP_RE.match(line)
         if m:
             ops.append((idx, m.group("name"), m.group("opcode")))
             defs_by_line[idx] = (m.group("name"), m.group("opcode"))
+            defs_by_name.setdefault(m.group("name"), []).append(idx)
+            operands_by_line[idx] = _OPERAND_REF_RE.findall(line[m.end():])
         # operand references (past the "%name =" definition when present);
         # names recur across computations, so keep every use line and pick
         # the first one AFTER the issuing op below
         for ref in _OPERAND_REF_RE.findall(line[m.end():] if m else line):
             uses.setdefault(ref, []).append(idx)
+
+    def _is_chained_hop(idx: int) -> bool:
+        """True when the permute at ``idx`` is a later hop of a ring whose
+        head already issued: an upstream collective-permute with the SAME
+        ring signature is reachable through the operand dataflow within a
+        few steps.  The bound is small on purpose — a ring hop's input is
+        at most store-fusion -> previous hop away, while an unrelated
+        permute that merely post-dates another is separated by the real
+        compute between them.  This is the backward complement of the
+        forward carry-chain chase: XLA fuses the ring's accumulate adds
+        with neighbouring real compute (update fusions, sqrt fusions), so
+        the forward chase alone stops early and would re-count every
+        surviving hop as its own collective."""
+        sig = _permute_sig(lines[idx])
+        frontier = operands_by_line.get(idx, [])
+        for _ in range(4):
+            nxt = []
+            for nm in frontier:
+                dls = defs_by_name.get(nm)
+                if not dls:
+                    continue
+                j = bisect.bisect_left(dls, idx)
+                if j == 0:
+                    continue
+                didx = dls[j - 1]        # nearest upstream def of this name
+                dop = defs_by_line[didx][1]
+                if _base_opcode(dop) == "collective-permute":
+                    if _permute_sig(lines[didx]) == sig:
+                        return True
+                    continue             # a DIFFERENT ring: not this chain
+                nxt.extend(operands_by_line.get(didx, ()))
+            frontier = nxt[:64]          # bound the fan-in walk
+            if not frontier:
+                return False
+        return False
     compute_lines = sorted(i for i, nm, opc in ops
                            if _is_compute_opcode(opc, nm))
 
@@ -271,7 +336,7 @@ def overlap_fraction(hlo_text: str) -> Dict:
                    - bisect.bisect_right(compute_lines, lo))
 
     def first_real_consumer(idx: int, name: str):
-        """(window_end, loop_carried) for the value defined at ``idx``.
+        """(window_end, loop_carried, absorbed) for the value at ``idx``.
 
         Chases through pure data-movement consumers (the carry stores a
         scan wraps around an in-flight collective result).  A value that
@@ -280,36 +345,49 @@ def overlap_fraction(hlo_text: str) -> Dict:
         of the body is its latency window — exactly the overlapped
         backward scan's start/wait structure.  The chase also passes
         through the ring's own chain (hop permutes + accumulate adds), so
-        a chained reduce-scatter reads as one logical collective.  Only a
-        FIRST consumer that is the ROOT (or a chain op leading to it)
-        counts as carried — a value whose first consumer is real compute
-        is NOT carried even if its raw value also lands in the ROOT tuple,
-        and a dead collective (no consumers) is not overlap evidence."""
+        a chained reduce-scatter reads as one logical collective;
+        ``absorbed`` returns the (line, name) of every collective op the
+        chase passed through — the chain's later hops, which are phases of
+        THIS logical collective and must not be re-counted as independent
+        collectives (counting each hop made a 24-hop ring and a lone psum
+        land on the same fraction).  Only a FIRST consumer that is the
+        ROOT (or a chain op leading to it) counts as carried — a value
+        whose first consumer is real compute is NOT carried even if its
+        raw value also lands in the ROOT tuple, and a dead collective (no
+        consumers) is not overlap evidence."""
         hi = len(lines)
-        for _ in range(64):               # bounded chase
+        absorbed = []
+        for _ in range(256):              # bounded chase
             use_lines = uses.get(name, ())
             j = bisect.bisect_right(use_lines, idx)
             if j >= len(use_lines):
-                return len(lines), False  # dead value: no consumer at all
+                return len(lines), False, absorbed  # dead value: no consumer
             hi = use_lines[j]
             if lines[hi].lstrip().startswith("ROOT"):
-                return hi, True           # feeds the carry directly
+                return hi, True, absorbed  # feeds the carry directly
             d = defs_by_line.get(hi)
             if d is None or not _is_carry_chain(d[1], d[0]):
-                return hi, False
+                return hi, False, absorbed
+            if _base_opcode(d[1]) in COLLECTIVE_KINDS:
+                absorbed.append((hi, d[0]))
             idx, name = hi, d[0]
-        return hi, False
+        return hi, False, absorbed
 
     total = overlapped = in_windows = 0
     starts: Dict[str, int] = {}
+    absorbed_lines: set = set()
+    absorbed_names: set = set()
     for idx, name, opcode in ops:
-        base = opcode
-        is_start = base.endswith("-start")
-        is_done = base.endswith("-done")
-        for suffix in ("-start", "-done"):
-            if base.endswith(suffix):
-                base = base[: -len(suffix)]
+        base = _base_opcode(opcode)
+        is_start = opcode.endswith("-start")
+        is_done = opcode.endswith("-done")
         if base not in COLLECTIVE_KINDS:
+            continue
+        if idx in absorbed_lines or name in absorbed_names:
+            continue   # a chained hop of an already-counted collective
+        if base == "collective-permute" and _is_chained_hop(idx):
+            # a later hop of a ring already counted at its head; for a
+            # -start, skipping the record makes its -done a no-op below
             continue
         if is_start:
             starts[name] = idx
@@ -320,7 +398,7 @@ def overlap_fraction(hlo_text: str) -> Dict:
                                          else lines[idx])
             lo = starts.pop(ref.group(1), None) if ref else None
             if lo is None:
-                continue
+                continue   # absorbed (chained hop) or unmatched start
             hi = idx
         else:
             # sync collective: window runs to its first REAL consumer after
@@ -329,7 +407,10 @@ def overlap_fraction(hlo_text: str) -> Dict:
             # are consumed one iteration later, so they count as overlapped
             # even when the body's tail holds no further compute.
             lo = idx
-            hi, carried = first_real_consumer(idx, name)
+            hi, carried, absorbed = first_real_consumer(idx, name)
+            for aidx, aname in absorbed:
+                absorbed_lines.add(aidx)
+                absorbed_names.add(aname)
             if carried:
                 total += 1
                 n = compute_in(lo, hi)

@@ -93,9 +93,26 @@ def main(argv=None):
                     help="strict paper mode: quantize q(alpha*dW) in the "
                          "layer's gradient (I,F) format before the update")
     ap.add_argument("--overlap", default="off", choices=["off", "on"],
-                    help="software-pipeline each layer's dW all-reduce one "
-                         "backward-scan step deep (ring ppermute chunks "
-                         "overlap the next layer's G-step compute)")
+                    help="comm-optimized backward scan: ring-transport dW "
+                         "leaves software-pipeline --overlap-depth scan "
+                         "steps deep so the in-flight hops overlap the "
+                         "next layers' G-step compute, blocking-transport "
+                         "leaves land same-iteration updates (fused psum, "
+                         "or the sharded sgd update on scatter leaves); "
+                         "each bucket's transport comes from the per-size "
+                         "autotuner unless --transport forces one")
+    ap.add_argument("--overlap-depth", type=int, default=2,
+                    help="in-flight dW reduces per layer stream with "
+                         "--overlap on (clamped to the layer count; only "
+                         "ring-transport leaves defer)")
+    ap.add_argument("--transport", default="auto",
+                    choices=["auto", "ring", "psum", "scatter"],
+                    help="dW all-reduce transport: auto consults the "
+                         "measured per-bucket cache (primed at start-up "
+                         "for this model's dW sizes; REPRO_TRANSPORT "
+                         "overrides everything); ring/psum/scatter force "
+                         "one (scatter = native reduce-scatter whose 1/g "
+                         "chunk gets the sharded optimizer update)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-scale reduced twin of the arch")
     ap.add_argument("--ckpt-dir", default=None)
@@ -153,6 +170,8 @@ def main(argv=None):
     policy = dataclasses.replace(policy, kernel_backend=args.kernel_backend,
                                  compress_dw=args.compress_dw,
                                  overlap=args.overlap,
+                                 overlap_depth=args.overlap_depth,
+                                 dw_transport=args.transport,
                                  stochastic=args.stochastic,
                                  quantize_updates=args.quantize_updates)
     bits = default_bits(cfg, enabled=args.quantize)
@@ -162,6 +181,20 @@ def main(argv=None):
     params = lm.init_params(jax.random.key(0), cfg)
     opt_state = init_train_state(params, ocfg)
     start_step = 0
+
+    if args.overlap == "on" and args.transport == "auto" and n_data > 1:
+        # measure ring-vs-psum EAGERLY for this model's per-layer dW leaf
+        # sizes so the traced step consults real decisions, not the
+        # platform model (inside jit no measurement can run)
+        from repro.dist.async_collectives import prime_transport_cache
+        leaf_bytes = sorted({
+            int(np.asarray(jnp.asarray(x).shape).prod() // cfg.num_layers) * 4
+            for x in jax.tree.leaves(params["blocks"])})
+        decided = prime_transport_cache(leaf_bytes, n_data,
+                                        compressed=args.compress_dw)
+        picks = ", ".join(f"{b // 1024}kb->{t}" for b, t in decided.items())
+        print(f"[train] transport autotuner (g={n_data}): {picks}",
+              flush=True)
 
     p_sh = to_named(param_pspecs(cfg, params, mesh), mesh)
     ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None

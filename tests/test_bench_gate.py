@@ -73,3 +73,81 @@ def test_uniform_shift_passes(tmp_path):
         {"family_dense": 1000.0, "family_moe": 1000.0},
         {"family_dense": 1900.0, "family_moe": 2000.0})
     assert code == 0, out
+
+
+def test_zero_baseline_row_skipped_even_at_min_us_zero(tmp_path):
+    """Non-timing rows (speedup / hlo-fraction / transport-decision rows
+    use us_per_call 0.0 by convention) must never enter the ratio math:
+    with --min-us 0 a 0.0 baseline used to divide by zero."""
+    code, out = run_gate(
+        tmp_path,
+        {"step_walltime_on": 1000.0, "transport_auto_64kb": 0.0},
+        {"step_walltime_on": 1000.0, "transport_auto_64kb": 0.0},
+        extra=("--min-us", "0"))
+    assert code == 0, out
+    assert "Traceback" not in out and "ZeroDivisionError" not in out
+    assert "1 rows within" in out      # only the timed row was compared
+
+
+# ---------------------------------------------------------------------------
+# check_overlap_speedup.py: the hard overlap=on speedup gate
+# ---------------------------------------------------------------------------
+
+SPEEDUP_GATE = ROOT / "benchmarks" / "check_overlap_speedup.py"
+
+
+def run_speedup_gate(tmp_path, rows, extra=()):
+    f = tmp_path / "fresh.json"
+    f.write_text(json.dumps(rows))
+    out = subprocess.run(
+        [sys.executable, str(SPEEDUP_GATE), "--fresh", str(f), *extra],
+        capture_output=True, text=True, cwd=ROOT)
+    return out.returncode, out.stdout + out.stderr
+
+
+def _on_row(speedup, n_devices=4):
+    return {"suite": "overlap", "name": "overlap/step_walltime_on",
+            "us_per_call": 1000.0, "speedup": speedup,
+            "n_devices": n_devices}
+
+
+def test_speedup_gate_passes_on_win(tmp_path):
+    code, out = run_speedup_gate(tmp_path, [_on_row(1.12)])
+    assert code == 0, out
+    assert "gate OK" in out
+
+
+def test_speedup_gate_fails_on_measured_slowdown(tmp_path):
+    """The 0.87x regression this PR fixes must FAIL the gate loudly."""
+    code, out = run_speedup_gate(tmp_path, [_on_row(0.87)])
+    assert code == 1
+    assert "measured slowdown" in out
+
+
+def test_speedup_gate_warn_only_below_min_devices(tmp_path):
+    """Single-device CI shards cannot measure the transport tradeoff: the
+    gate records the number but does not fail."""
+    code, out = run_speedup_gate(tmp_path, [_on_row(0.5, n_devices=1)])
+    assert code == 0, out
+    assert "NOT gated" in out
+
+
+def test_speedup_gate_missing_row_is_an_error(tmp_path):
+    """A fresh file without the gated row must not read as a pass."""
+    code, out = run_speedup_gate(
+        tmp_path, [{"suite": "overlap", "name": "overlap/step_walltime_off",
+                    "us_per_call": 1000.0, "n_devices": 4}])
+    assert code == 1
+    assert "step_walltime_on" in out
+
+
+def test_speedup_gate_env_override(tmp_path, monkeypatch):
+    f = tmp_path / "fresh.json"
+    f.write_text(json.dumps([_on_row(1.05)]))
+    out = subprocess.run(
+        [sys.executable, str(SPEEDUP_GATE), "--fresh", str(f)],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**dict(__import__("os").environ),
+             "REPRO_OVERLAP_MIN_SPEEDUP": "1.5"})
+    assert out.returncode == 1
+    assert "x1.50" in out.stdout

@@ -208,6 +208,87 @@ ENTRY %main {
     assert ov2["compute_ops_in_windows"] == 0
 
 
+def test_overlap_fraction_collapses_chained_ring_hops():
+    """A ring decomposed into chained permute hops (hop -> accumulate ->
+    hop -> ...) is ONE logical collective: the chain-head's chase absorbs
+    the downstream hops, so the hop count cannot swamp the denominator
+    (the bug that made a 24-hop overlapped ring and a lone blocking psum
+    report the same 0.2222 fraction)."""
+    hlo = """
+ENTRY %main {
+  %p0 = f32[8]{0} parameter(0)
+  %hop1 = f32[8]{0} collective-permute(f32[8]{0} %p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %acc1 = f32[8]{0} add(f32[8]{0} %hop1, f32[8]{0} %p0)
+  %hop2 = f32[8]{0} collective-permute(f32[8]{0} %acc1), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %acc2 = f32[8]{0} add(f32[8]{0} %hop2, f32[8]{0} %p0)
+  %hop3 = f32[8]{0} collective-permute(f32[8]{0} %acc2), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %acc3 = f32[8]{0} add(f32[8]{0} %hop3, f32[8]{0} %p0)
+  ROOT %t = (f32[8]{0}) tuple(%acc3)
+}
+"""
+    ov = overlap_fraction(hlo)
+    assert ov["collectives"] == 1          # 3 hops, one logical ring
+    assert ov["overlapped"] == 1           # loop-carried into the ROOT
+    assert ov["overlap_fraction"] == pytest.approx(1.0)
+
+
+def test_overlap_fraction_distinguishes_ring_from_blocking_regime():
+    """The regression this fix targets: a module mixing a carried ring
+    with blocking psums must NOT report the blocking module's fraction.
+    Before hop absorption every hop counted as its own overlapped
+    collective, inflating both numerator and denominator until the two
+    regimes became numerically indistinguishable."""
+    blocking = """
+ENTRY %main {
+  %p0 = f32[8]{0} parameter(0)
+  %ar1 = f32[8]{0} all-reduce(f32[8]{0} %p0), replica_groups={{0,1}}, to_apply=%add
+  %u1 = f32[8]{0} multiply(f32[8]{0} %ar1, f32[8]{0} %p0)
+  %ar2 = f32[8]{0} all-reduce(f32[8]{0} %u1), replica_groups={{0,1}}, to_apply=%add
+  %u2 = f32[8]{0} multiply(f32[8]{0} %ar2, f32[8]{0} %u1)
+  ROOT %t = (f32[8]{0}) tuple(%u2)
+}
+"""
+    ringy = """
+ENTRY %main {
+  %p0 = f32[8]{0} parameter(0)
+  %ar1 = f32[8]{0} all-reduce(f32[8]{0} %p0), replica_groups={{0,1}}, to_apply=%add
+  %u1 = f32[8]{0} multiply(f32[8]{0} %ar1, f32[8]{0} %p0)
+  %hop1 = f32[8]{0} collective-permute(f32[8]{0} %u1), source_target_pairs={{0,1},{1,0}}
+  %acc1 = f32[8]{0} add(f32[8]{0} %hop1, f32[8]{0} %p0)
+  %hop2 = f32[8]{0} collective-permute(f32[8]{0} %acc1), source_target_pairs={{0,1},{1,0}}
+  %acc2 = f32[8]{0} add(f32[8]{0} %hop2, f32[8]{0} %p0)
+  ROOT %t = (f32[8]{0}) tuple(%acc2)
+}
+"""
+    ov_block = overlap_fraction(blocking)
+    ov_ring = overlap_fraction(ringy)
+    assert ov_block["collectives"] == 2 and ov_block["overlapped"] == 0
+    # ringy: the same 2 blocking-style ops would read 0.0; the carried
+    # ring adds ONE overlapped logical collective, not two hop entries
+    assert ov_ring["collectives"] == 2
+    assert ov_ring["overlapped"] == 1
+    assert ov_ring["overlap_fraction"] != ov_block["overlap_fraction"]
+
+
+def test_overlap_fraction_absorbs_async_permute_hops_in_chain():
+    """Chained hops emitted in -start/-done form absorb too: the done of
+    an absorbed start must not land in unmatched accounting or re-count."""
+    hlo = """
+ENTRY %main {
+  %p0 = f32[8]{0} parameter(0)
+  %hop1 = f32[8]{0} collective-permute(f32[8]{0} %p0), source_target_pairs={{0,1},{1,0}}
+  %acc1 = f32[8]{0} add(f32[8]{0} %hop1, f32[8]{0} %p0)
+  %h2s = f32[8]{0} collective-permute-start(f32[8]{0} %acc1), source_target_pairs={{0,1},{1,0}}
+  %h2d = f32[8]{0} collective-permute-done(f32[8]{0} %h2s)
+  %acc2 = f32[8]{0} add(f32[8]{0} %h2d, f32[8]{0} %p0)
+  ROOT %t = (f32[8]{0}) tuple(%acc2)
+}
+"""
+    ov = overlap_fraction(hlo)
+    assert ov["collectives"] == 1
+    assert ov["overlapped"] == 1
+
+
 def test_overlap_fraction_no_collectives_is_zero():
     ov = overlap_fraction(NO_COLLECTIVES_HLO)
     assert ov == {"collectives": 0, "overlapped": 0,

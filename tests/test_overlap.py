@@ -352,3 +352,63 @@ def test_check_regression_still_gates_with_baseline(tmp_path):
     out = _run_gate(["--baseline", str(base), "--fresh", str(fresh)])
     assert out.returncode == 1
     assert "FAIL s/b" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# overlap_fraction on captured HLO from both regimes (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_hlo_overlap_fraction_differs_between_regimes():
+    """Regression: ``overlap_fraction`` reported the IDENTICAL 0.2222 for
+    overlap=off (9 collectives / 2 overlapped) and overlap=on with the
+    ring transport (81 / 18) because every ppermute hop of the ring was
+    counted as its own overlapped collective, inflating numerator and
+    denominator in lockstep.  With hop-chain absorption the two compiled
+    regimes must produce DIFFERENT fractions, and the on-regime must not
+    count an order of magnitude more "collectives" than the off-regime
+    has logical reduces."""
+    out = run_py("""
+    import dataclasses, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import QuantPolicy, make_train_step
+    from repro.core.steps import default_bits, init_train_state
+    from repro.dist.hlo_analysis import overlap_fraction
+    from repro.models import lm
+    from repro.optim import Hyper, OptimizerConfig
+    from test_models import make_batch, tiny
+
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=8, t=32)
+    ocfg = OptimizerConfig(kind="sgd")
+    bits = default_bits(cfg, enabled=False)
+    hyper = Hyper(lr=jnp.float32(1e-2), step=jnp.int32(0))
+    opt = init_train_state(params, ocfg)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    stats = {}
+    for overlap in ("off", "on"):
+        # the issue's regression pair: off with the (autotuned -> psum)
+        # default, on with the ring transport forced -- 9/2 vs 81/18 hops
+        pol = QuantPolicy(quantize_weights=False, quantize_acts=False,
+                          quantize_grads=False, kernel_backend="off",
+                          dw_psum_axes=("data",), dw_num_replicas=4,
+                          overlap=overlap,
+                          dw_transport="ring" if overlap == "on" else "auto")
+        step = make_train_step(cfg, pol, ocfg)
+        fn = jax.jit(jax.shard_map(
+            lambda p, s, b: step(p, s, b, hyper, bits),
+            mesh=mesh, in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P(), P()), check_vma=False))
+        hlo = fn.lower(params, opt, batch).compile().as_text()
+        stats[overlap] = overlap_fraction(hlo)
+
+    off, on = stats["off"], stats["on"]
+    assert off["collectives"] > 0 and on["collectives"] > 0
+    # hop absorption: the on-regime's ring must not explode the count
+    assert on["collectives"] <= 4 * off["collectives"], (off, on)
+    assert on["overlap_fraction"] > 0, (off, on)
+    assert on["overlap_fraction"] != off["overlap_fraction"], (off, on)
+    print("REGIMES", off["overlap_fraction"], on["overlap_fraction"])
+    """)
+    assert "REGIMES" in out

@@ -1,0 +1,89 @@
+"""Checkpoint-path cost: what fault tolerance charges the training loop.
+
+Times the four operations on a synthetic multi-leaf pytree sized like a
+reduced-config model:
+
+  ckpt/sync_save        full atomic save (write + fsync + rename), the
+                        cost a SYNCHRONOUS checkpointer would charge
+  ckpt/async_overhead   per-step time ``AsyncCheckpointer.save`` blocks the
+                        loop (host snapshot + join of the previous write)
+                        when compute covers the write — the number that
+                        belongs in the training-step budget
+  ckpt/restore          restore_checkpoint (verify + load + host->device)
+  ckpt/verify           standalone integrity scan (crc32 over every leaf)
+
+Derived fields carry the tree size so MB/s trends survive size changes.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+
+def make_tree(total_mb: float, n_leaves: int = 16) -> dict:
+    rng = np.random.default_rng(0)
+    per = max(1, int(total_mb * 1e6 / 4 / n_leaves))
+    return {f"layer{i:02d}": {"w": rng.standard_normal(per)
+                              .astype(np.float32)}
+            for i in range(n_leaves)}
+
+
+def run(quick: bool = False):
+    from repro.ckpt import (AsyncCheckpointer, restore_checkpoint,
+                            save_checkpoint, verify_checkpoint)
+
+    total_mb = 8.0 if quick else 64.0
+    n_saves = 4 if quick else 6
+    tree = make_tree(total_mb)
+    rows = []
+
+    with tempfile.TemporaryDirectory() as d:
+        # sync save: the cost fault tolerance charges without async
+        t0 = time.perf_counter()
+        save_checkpoint(d, 1, tree)
+        sync_s = time.perf_counter() - t0
+        rows.append({"name": "ckpt/sync_save",
+                     "us_per_call": sync_s * 1e6,
+                     "mb": total_mb,
+                     "mb_per_s": round(total_mb / sync_s, 1)})
+
+        t0 = time.perf_counter()
+        problems = verify_checkpoint(d, 1)
+        verify_s = time.perf_counter() - t0
+        assert problems == []
+        rows.append({"name": "ckpt/verify",
+                     "us_per_call": verify_s * 1e6,
+                     "mb": total_mb,
+                     "mb_per_s": round(total_mb / verify_s, 1)})
+
+        t0 = time.perf_counter()
+        restored, step, _ = restore_checkpoint(d, tree)
+        restore_s = time.perf_counter() - t0
+        assert step == 1
+        rows.append({"name": "ckpt/restore",
+                     "us_per_call": restore_s * 1e6,
+                     "mb": total_mb,
+                     "mb_per_s": round(total_mb / restore_s, 1)})
+
+    # async overhead: per-step blocked time when inter-save compute covers
+    # the background write (the steady-state training case)
+    with tempfile.TemporaryDirectory() as d:
+        compute_s = sync_s * 1.3
+        blocked = []
+        with AsyncCheckpointer(d, keep_n=2) as ck:
+            for step in range(1, n_saves + 1):
+                t0 = time.perf_counter()
+                ck.save(step, tree)
+                blocked.append(time.perf_counter() - t0)
+                time.sleep(compute_s)  # stand-in for the training step
+        # first save has no prior write to join; steady state is the rest
+        steady = blocked[1:] or blocked
+        rows.append({"name": "ckpt/async_overhead",
+                     "us_per_call": float(np.mean(steady)) * 1e6,
+                     "mb": total_mb,
+                     "saves": n_saves,
+                     "vs_sync_pct": round(100 * float(np.mean(steady))
+                                          / sync_s, 1)})
+    return rows

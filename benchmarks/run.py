@@ -18,6 +18,8 @@ via ``benchmarks/check_regression.py``, and uploads both as artifacts.
   overlap     — (beyond paper)    (comm-overlapped backward scan, ring vs
                                    psum, HLO overlap_fraction)
   roofline    — (beyond paper)    (dry-run roofline summary)
+  ckpt        — (beyond paper)    (async save overhead per step, restore
+                                   latency, integrity-scan cost)
 """
 from __future__ import annotations
 
@@ -37,8 +39,8 @@ def main() -> None:
                          "BENCH_kernels.json)")
     args = ap.parse_args()
 
-    from benchmarks import (convergence, kernels_bench, overhead, overlap,
-                            pipeline, roofline, savings)
+    from benchmarks import (ckpt_bench, convergence, kernels_bench, overhead,
+                            overlap, pipeline, roofline, savings)
     suites = {
         "convergence": convergence.run,
         "overhead": overhead.run,
@@ -47,6 +49,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "overlap": overlap.run,
         "roofline": roofline.run,
+        "ckpt": ckpt_bench.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

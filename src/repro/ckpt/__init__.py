@@ -2,8 +2,12 @@ from repro.ckpt.checkpoint import (
     save_checkpoint,
     restore_checkpoint,
     latest_step,
+    latest_valid_step,
+    list_steps,
+    verify_checkpoint,
     AsyncCheckpointer,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "latest_valid_step", "list_steps", "verify_checkpoint",
            "AsyncCheckpointer"]

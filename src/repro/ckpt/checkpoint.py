@@ -1,22 +1,46 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic-reshardable.
+"""Fault-tolerant checkpointing: atomic, async, verified, elastic-reshardable.
 
 Layout (one directory per step):
 
     <dir>/step_000123/
-        manifest.msgpack     # pytree structure, shapes, dtypes, metadata
+        manifest.msgpack     # pytree structure, shapes, dtypes, crc32s, extra
         arr_000.npy ...      # one file per leaf (host-local full arrays)
     <dir>/LATEST             # atomic pointer file (renamed into place)
 
-Guarantees:
-  * atomicity — written to ``step_X.tmp-<pid>`` then os.rename'd; a crash
-    mid-write never corrupts LATEST.
+Guarantees (each one backed by a drill in tests/test_fault_injection.py /
+tests/test_recovery_drills.py, not just this docstring):
+
+  * atomicity — written to ``step_X.tmp-<pid>`` then os.rename'd after
+    fsyncing every file AND the directory; a crash mid-write never corrupts
+    LATEST, and a crash between the data rename and the pointer rename
+    leaves LATEST on the previous (still valid) checkpoint.
+  * integrity — the manifest records a crc32 per leaf; ``verify_checkpoint``
+    checks file presence, sizes and checksums without deserialising, and
+    ``restore_checkpoint`` verifies by default.
+  * recovery — when LATEST (or the requested step) fails verification,
+    restore WARNS LOUDLY and falls back to the newest checkpoint that
+    passes, walking history until one does (``fallback=False`` to opt out;
+    an explicitly requested ``step=`` never falls back silently).
+  * transient-failure tolerance — the whole write attempt retries with
+    capped exponential backoff (``retries`` x ``backoff_s``), so an
+    injected/real EIO on a leaf write, an fsync hiccup or a rename failure
+    costs a retry, not the checkpoint.
   * elasticity — arrays are stored mesh-agnostic (logical shapes); restore
     applies whatever shardings the *current* mesh prescribes via
     jax.device_put, so a job can restart on a different device count.
   * async — AsyncCheckpointer snapshots to host memory synchronously
-    (cheap) and writes in a background thread, overlapping with training.
+    (cheap) and writes in a background thread, overlapping with training;
+    ``close()`` (or the context manager, or the atexit hook) flushes the
+    final in-flight write and re-raises any background error — a daemon
+    thread alone would silently drop the last checkpoint at interpreter
+    exit.
   * retention — keep_n oldest checkpoints are pruned after a successful
     write (never prunes the one being written).
+
+Fault injection: ``save_checkpoint``/``AsyncCheckpointer`` accept
+``fault=cb``; the callback (see ``repro.ft.FaultPlan.ckpt_fault``) is
+invoked at each hook point — ``cb("io"|"fsync"|"rename", step)`` — and
+simulates a failure by raising.  Production runs pass nothing.
 
 On a real multi-host pod each host writes only addressable shards of its
 process-local data (same manifest format, `shard_<proc>` suffix); the
@@ -24,18 +48,25 @@ single-process container exercises the full-array path.
 """
 from __future__ import annotations
 
+import atexit
 import os
 import pathlib
 import shutil
+import sys
 import threading
 import time
-from typing import Any, Optional
+import warnings
+import zlib
+from typing import Any, Callable, List, Optional
 
 import jax
 import msgpack
 import numpy as np
 
 PyTree = Any
+FaultCb = Optional[Callable[[str, int], None]]
+
+MANIFEST_VERSION = 2  # v2 added per-leaf crc32 + nbytes
 
 
 def _flatten_with_paths(tree):
@@ -47,40 +78,106 @@ def _flatten_with_paths(tree):
     return leaves
 
 
-def save_checkpoint(directory, step: int, tree: PyTree, *,
-                    extra: Optional[dict] = None, keep_n: int = 3) -> pathlib.Path:
-    """Synchronous atomic save. Returns the final checkpoint path."""
-    directory = pathlib.Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
+def _fsync_file(path: pathlib.Path):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: pathlib.Path):
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _warn(msg: str):
+    """Loud on both channels: warnings for in-process callers/tests,
+    stderr for subprocess drills grepping driver output."""
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    print(f"[ckpt] WARNING: {msg}", file=sys.stderr, flush=True)
+
+
+def _write_attempt(directory: pathlib.Path, step: int, leaves, manifest_extra,
+                   keep_n: int, fault: FaultCb) -> pathlib.Path:
+    """One full write attempt: tmp dir -> leaves -> manifest -> fsync ->
+    rename -> LATEST.  Raises on any failure; the caller retries."""
     final = directory / f"step_{step:08d}"
     tmp = directory / f"step_{step:08d}.tmp-{os.getpid()}"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
 
-    leaves = _flatten_with_paths(tree)
-    manifest = {"step": step, "time": time.time(), "extra": extra or {},
-                "leaves": []}
-    for i, (path, leaf) in enumerate(leaves):
-        arr = np.asarray(leaf)
+    manifest = {"version": MANIFEST_VERSION, "step": step,
+                "time": time.time(), "extra": manifest_extra, "leaves": []}
+    for i, (path, arr) in enumerate(leaves):
         fname = f"arr_{i:05d}.npy"
+        if fault is not None:
+            fault("io", step)
         np.save(tmp / fname, arr, allow_pickle=False)
         manifest["leaves"].append(
             {"path": path, "file": fname, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
+             "dtype": str(arr.dtype), "nbytes": int(arr.nbytes),
+             "crc32": zlib.crc32(arr.tobytes())})
     (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+
+    # durability before visibility: the rename must not land before the
+    # bytes it points at
+    if fault is not None:
+        fault("fsync", step)
+    for p in tmp.iterdir():
+        _fsync_file(p)
+    _fsync_dir(tmp)
 
     if final.exists():
         shutil.rmtree(final)
+    if fault is not None:
+        fault("rename", step)
     os.rename(tmp, final)
+    _fsync_dir(directory)
 
     # atomic LATEST pointer
     ptr_tmp = directory / f"LATEST.tmp-{os.getpid()}"
     ptr_tmp.write_text(final.name)
+    _fsync_file(ptr_tmp)
     os.rename(ptr_tmp, directory / "LATEST")
+    _fsync_dir(directory)
 
     _prune(directory, keep_n)
     return final
+
+
+def save_checkpoint(directory, step: int, tree: PyTree, *,
+                    extra: Optional[dict] = None, keep_n: int = 3,
+                    fault: FaultCb = None, retries: int = 3,
+                    backoff_s: float = 0.05,
+                    max_backoff_s: float = 2.0) -> pathlib.Path:
+    """Synchronous atomic verified save. Returns the final checkpoint path.
+
+    Transient IO failures (leaf write, fsync, rename) are retried up to
+    ``retries`` extra attempts with capped exponential backoff; the final
+    failure propagates."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    # materialise leaves ONCE so retries rewrite identical bytes
+    leaves = [(p, np.asarray(leaf)) for p, leaf in _flatten_with_paths(tree)]
+
+    attempt = 0
+    while True:
+        try:
+            return _write_attempt(directory, step, leaves, extra or {},
+                                  keep_n, fault)
+        except OSError as e:
+            attempt += 1
+            if attempt > retries:
+                raise
+            delay = min(backoff_s * (2 ** (attempt - 1)), max_backoff_s)
+            _warn(f"save step {step} attempt {attempt}/{retries} failed "
+                  f"({e}); retrying in {delay:.2f}s")
+            time.sleep(delay)
 
 
 def _prune(directory: pathlib.Path, keep_n: int):
@@ -91,32 +188,155 @@ def _prune(directory: pathlib.Path, keep_n: int):
         shutil.rmtree(old, ignore_errors=True)
 
 
+def list_steps(directory) -> List[int]:
+    """All on-disk checkpoint steps, ascending (no validity check)."""
+    directory = pathlib.Path(directory)
+    if not directory.is_dir():
+        return []
+    out = []
+    for p in directory.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and ".tmp" not in p.name:
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
 def latest_step(directory) -> Optional[int]:
     directory = pathlib.Path(directory)
     ptr = directory / "LATEST"
     if not ptr.exists():
-        return None
+        # a crash between the data rename and the pointer rename leaves a
+        # complete checkpoint with no pointer; surface it rather than
+        # claiming the directory is empty
+        steps = list_steps(directory)
+        return steps[-1] if steps else None
     name = ptr.read_text().strip()
     if not (directory / name / "manifest.msgpack").exists():
-        return None
+        steps = list_steps(directory)
+        return steps[-1] if steps else None
     return int(name.split("_")[1])
 
 
+def verify_checkpoint(directory, step: int) -> List[str]:
+    """Integrity check WITHOUT deserialising: manifest readable, every leaf
+    file present with the manifest's byte size and crc32.  Returns the list
+    of problems (empty == valid)."""
+    cdir = pathlib.Path(directory) / f"step_{step:08d}"
+    problems: List[str] = []
+    mpath = cdir / "manifest.msgpack"
+    if not mpath.exists():
+        return [f"{cdir.name}: missing manifest"]
+    try:
+        manifest = msgpack.unpackb(mpath.read_bytes())
+    except Exception as e:  # noqa: BLE001 - any unpack failure = corrupt
+        return [f"{cdir.name}: unreadable manifest ({e})"]
+    for entry in manifest.get("leaves", []):
+        fpath = cdir / entry["file"]
+        if not fpath.exists():
+            problems.append(f"{cdir.name}/{entry['file']}: missing")
+            continue
+        if "crc32" not in entry:
+            continue  # v1 manifest: presence is all we can check
+        try:
+            arr = np.load(fpath, allow_pickle=False)
+        except Exception as e:  # noqa: BLE001
+            problems.append(f"{cdir.name}/{entry['file']}: unreadable ({e})")
+            continue
+        if int(arr.nbytes) != int(entry.get("nbytes", arr.nbytes)):
+            problems.append(
+                f"{cdir.name}/{entry['file']}: size {arr.nbytes} != "
+                f"manifest {entry['nbytes']}")
+        elif zlib.crc32(arr.tobytes()) != entry["crc32"]:
+            problems.append(
+                f"{cdir.name}/{entry['file']}: crc32 mismatch "
+                f"(bit rot or torn write)")
+    return problems
+
+
+def latest_valid_step(directory) -> Optional[int]:
+    """Newest step that passes ``verify_checkpoint`` (LATEST-first order)."""
+    for step in _candidate_steps(directory):
+        if not verify_checkpoint(directory, step):
+            return step
+    return None
+
+
+def _candidate_steps(directory) -> List[int]:
+    """Restore order: the LATEST pointer's step first, then every other
+    on-disk step, newest first."""
+    steps = sorted(list_steps(directory), reverse=True)
+    head = latest_step(directory)
+    if head in steps:
+        steps.remove(head)
+        steps.insert(0, head)
+    return steps
+
+
 def restore_checkpoint(directory, template: PyTree, *, step: Optional[int] = None,
-                       shardings: Optional[PyTree] = None):
+                       shardings: Optional[PyTree] = None, verify: bool = True,
+                       fallback: bool = True):
     """Restore into the structure of ``template``.
 
     ``shardings`` (optional pytree of NamedSharding, same structure) reshard
     the arrays onto the CURRENT mesh — this is the elastic-restart path: the
     checkpoint stores logical arrays; placement is decided at restore time.
 
+    With ``verify`` (default) each candidate's checksums are checked before
+    deserialising; with ``fallback`` (default, only when ``step`` is not
+    pinned) a failing candidate is skipped WITH A LOUD WARNING and the next
+    newest is tried — so a bit-flipped or torn LATEST costs one checkpoint
+    interval, not the run.  A pinned ``step=`` that fails verification
+    raises instead (the caller asked for that exact state).
+
     Returns (tree, step, extra).
     """
     directory = pathlib.Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
+    if step is not None:
+        candidates = [step]
+        allow_fallback = False
+    else:
+        candidates = _candidate_steps(directory)
+        allow_fallback = fallback
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint in {directory}")
+
+    errors: List[str] = []
+    for i, cand in enumerate(candidates):
+        if verify:
+            problems = verify_checkpoint(directory, cand)
+            if problems:
+                msg = (f"checkpoint step {cand} failed verification: "
+                       + "; ".join(problems))
+                if not allow_fallback:
+                    raise ValueError(msg)
+                _warn(msg + " — falling back to the previous checkpoint")
+                errors.append(msg)
+                continue
+        try:
+            tree, got_step, extra = _load_checkpoint(
+                directory, cand, template, shardings)
+        except (OSError, KeyError) as e:
+            # ValueError (template shape mismatch) propagates: that is a
+            # CALLER bug every candidate shares, not checkpoint damage
+            if not allow_fallback:
+                raise
+            msg = f"checkpoint step {cand} failed to load: {e}"
+            _warn(msg + " — falling back to the previous checkpoint")
+            errors.append(msg)
+            continue
+        if i > 0:
+            _warn(f"recovered from checkpoint step {cand} after "
+                  f"{i} newer candidate(s) failed")
+        return tree, got_step, extra
+    raise FileNotFoundError(
+        f"no valid checkpoint in {directory}; tried {candidates}: "
+        + " | ".join(errors))
+
+
+def _load_checkpoint(directory: pathlib.Path, step: int, template: PyTree,
+                     shardings: Optional[PyTree]):
     cdir = directory / f"step_{step:08d}"
     manifest = msgpack.unpackb((cdir / "manifest.msgpack").read_bytes())
 
@@ -147,22 +367,37 @@ class AsyncCheckpointer:
     """Snapshot-to-host synchronously, write in a background thread.
 
     ``save`` blocks only for the device->host copy; the previous write is
-    joined first (at most one outstanding write, bounding host memory)."""
+    joined first (at most one outstanding write, bounding host memory).
 
-    def __init__(self, directory, keep_n: int = 3):
+    Lifecycle: the writer thread is a daemon, so WITHOUT an explicit join
+    the interpreter would exit mid-write and silently drop the final
+    checkpoint.  ``close()`` joins the in-flight write and re-raises any
+    background error; it runs automatically via the context-manager exit
+    and an ``atexit`` hook (atexit fires before daemon threads are killed),
+    so even a driver that forgets ``wait()`` keeps its last checkpoint —
+    only a hard kill (os._exit / SIGKILL) skips it, which is exactly the
+    crash the on-disk atomicity story covers."""
+
+    def __init__(self, directory, keep_n: int = 3, fault: FaultCb = None):
         self.directory = pathlib.Path(directory)
         self.keep_n = keep_n
+        self.fault = fault
         self._thread: Optional[threading.Thread] = None
+        self._closed = False
         self.last_error: Optional[Exception] = None
+        self._atexit = atexit.register(self._atexit_close)
 
     def save(self, step: int, tree: PyTree, extra: Optional[dict] = None):
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot
 
         def _write():
             try:
                 save_checkpoint(self.directory, step, host_tree,
-                                extra=extra, keep_n=self.keep_n)
+                                extra=extra, keep_n=self.keep_n,
+                                fault=self.fault)
             except Exception as e:  # noqa: BLE001 - surfaced on next wait()
                 self.last_error = e
 
@@ -176,3 +411,33 @@ class AsyncCheckpointer:
         if self.last_error is not None:
             err, self.last_error = self.last_error, None
             raise err
+
+    def close(self):
+        """Flush the in-flight write and surface its error; idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        atexit.unregister(self._atexit_close)
+        self.wait()
+
+    def _atexit_close(self):
+        try:
+            self.close()
+        except Exception as e:  # noqa: BLE001 - atexit must not re-raise
+            print(f"[ckpt] WARNING: final checkpoint write failed at "
+                  f"interpreter exit: {e}", file=sys.stderr, flush=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        # don't mask an in-flight training exception with a flush error
+        if exc_type is not None:
+            try:
+                self.close()
+            except Exception as e:  # noqa: BLE001
+                print(f"[ckpt] WARNING: checkpoint flush failed during "
+                      f"exception unwind: {e}", file=sys.stderr, flush=True)
+            return False
+        self.close()
+        return False

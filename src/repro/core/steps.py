@@ -81,6 +81,71 @@ def num_scan_units(cfg: ModelConfig) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Resume-state capture: everything a bitwise restart needs beyond params
+# ---------------------------------------------------------------------------
+
+RESUME_SCHEMA = 1
+
+
+def capture_resume_extra(cfg: ModelConfig, step: int, *, loader=None,
+                         user_extra: Optional[dict] = None) -> dict:
+    """The checkpoint ``extra`` payload that makes a restart BITWISE.
+
+    (params, opt_state) alone under-specify a resumed step: the restarted
+    loop also needs (a) the data-pipeline step, so the step-indexed loader
+    replays the exact batch stream, (b) the stochastic-rounding RNG
+    convention — the engine folds a fixed base key with the step index, so
+    recording the step pins the whole stream, and (c) the primed transport
+    cache, so the resumed backward scan instantiates the SAME collective
+    schedule the killed run measured (a re-measurement could flip a
+    ring/psum/scatter decision and change reduction order).  Everything is
+    msgpack-scalar/str, so it rides the checkpoint manifest unchanged.
+    """
+    from repro.dist.async_collectives import transport_cache_snapshot
+    extra = {
+        "resume_schema": RESUME_SCHEMA,
+        "arch": cfg.name,
+        "family": cfg.family,
+        "data_step": int(step),
+        "transport_cache": transport_cache_snapshot(),
+    }
+    if loader is not None:
+        extra["loader"] = {"served": int(loader.served),
+                           "skips": int(loader.skips),
+                           "stale_drops": int(getattr(loader, "stale_drops",
+                                                      0))}
+    if user_extra:
+        extra.update(user_extra)
+    return extra
+
+
+def apply_resume_extra(extra: dict, cfg: ModelConfig,
+                       ckpt_step: int) -> int:
+    """Validate + install a checkpoint's resume payload.
+
+    Rejects a checkpoint written by a different arch (restoring qwen state
+    into gemma is silent corruption the shape check alone may not catch),
+    installs the persisted transport-cache decisions, and returns the data
+    step to resume from (falling back to the checkpoint step for pre-schema
+    checkpoints, whose save convention was step == next data step).
+    """
+    extra = extra or {}
+    arch = extra.get("arch")
+    if arch is not None and arch != cfg.name:
+        raise ValueError(
+            f"checkpoint was written by arch {arch!r}; refusing to resume "
+            f"it as {cfg.name!r}")
+    cache = extra.get("transport_cache")
+    if cache:
+        from repro.dist.async_collectives import load_transport_cache
+        n = load_transport_cache(cache)
+        if n:
+            print(f"[train] restored {n} transport-cache decision(s) from "
+                  f"checkpoint", flush=True)
+    return int(extra.get("data_step", ckpt_step))
+
+
+# ---------------------------------------------------------------------------
 # Per-family stack bodies: body(params_slice, shared, x, bits_l) -> (y, aux)
 # ---------------------------------------------------------------------------
 

@@ -2,7 +2,8 @@ from repro.data.pipeline import (
     SyntheticLMDataset,
     SyntheticClassificationDataset,
     StragglerTolerantLoader,
+    DataProducerError,
 )
 
 __all__ = ["SyntheticLMDataset", "SyntheticClassificationDataset",
-           "StragglerTolerantLoader"]
+           "StragglerTolerantLoader", "DataProducerError"]

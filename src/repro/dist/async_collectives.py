@@ -293,6 +293,33 @@ def dump_transport_cache(path: str) -> None:
         json.dump(transport_cache_snapshot(), f, indent=2, sort_keys=True)
 
 
+def load_transport_cache(snapshot: dict, *, overwrite: bool = False) -> int:
+    """Inverse of ``transport_cache_snapshot``: install persisted decisions
+    (e.g. the ones a checkpoint carried in its ``extra``) so a RESUMED run
+    reuses the original run's measured transports instead of re-measuring —
+    which keeps the restarted backward scan's collective schedule, and
+    therefore its numerics, identical to the killed run's.  Returns the
+    number of entries installed; malformed entries are skipped."""
+    n = 0
+    for key, entry in (snapshot or {}).items():
+        try:
+            parts = dict(p.split("=", 1) for p in key.split(","))
+            k = (parts["compressed"] == "True", int(parts["bytes"]),
+                 int(parts["g"]))
+            transport = entry["transport"]
+        except (KeyError, ValueError, AttributeError, TypeError):
+            continue
+        if transport not in TRANSPORTS:
+            continue
+        if not overwrite and k in _TRANSPORT_CACHE:
+            continue
+        _TRANSPORT_CACHE[k] = {"transport": transport,
+                               "source": f"restored:{entry.get('source', '?')}",
+                               "us": dict(entry.get("us") or {})}
+        n += 1
+    return n
+
+
 def clear_transport_cache() -> None:
     _TRANSPORT_CACHE.clear()
 

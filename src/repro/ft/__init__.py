@@ -1,0 +1,10 @@
+from repro.ft.faults import (
+    ENV_KNOB,
+    FAULT_EXIT_CODE,
+    FaultEvent,
+    FaultPlan,
+    flip_one_bit,
+)
+
+__all__ = ["ENV_KNOB", "FAULT_EXIT_CODE", "FaultEvent", "FaultPlan",
+           "flip_one_bit"]

@@ -1,5 +1,5 @@
 """Production training driver: elastic mesh, checkpoint/restart, straggler-
-tolerant data loading, TaxoNN engine.
+tolerant data loading, fault-injection drills, TaxoNN engine.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
         --steps 200 --reduced --ckpt-dir /tmp/run1 [--resume]
@@ -7,9 +7,16 @@ tolerant data loading, TaxoNN engine.
 Elasticity: the mesh is built from whatever devices exist at START-UP
 (``--data X --model Y`` or auto); checkpoints store logical arrays, so a
 job checkpointed on one topology restarts on another (restore reshards via
-the new mesh's shardings).  Fault tolerance: atomic async checkpoints every
-``--ckpt-every`` steps; on restart the step-indexed data pipeline resumes
-exactly.
+the new mesh's shardings).  Fault tolerance: atomic verified async
+checkpoints every ``--ckpt-every`` steps carrying the full resume payload
+(data step, transport-cache decisions — see
+``core.steps.capture_resume_extra``); on restart the step-indexed data
+pipeline resumes exactly and a same-topology restart is BITWISE identical
+to the uninterrupted run.  ``--fault-plan`` (or ``REPRO_FAULT_PLAN``)
+injects deterministic faults — crash-at-step, checkpoint IO/fsync/rename
+failures, straggler stalls, post-save bit flips — for reproducible
+recovery drills (see ``repro.ft``); a restart past a corrupted LATEST
+falls back to the newest valid checkpoint with a loud warning.
 """
 from __future__ import annotations
 
@@ -24,11 +31,13 @@ import numpy as np
 from repro.ckpt import AsyncCheckpointer, restore_checkpoint, latest_step
 from repro.configs import ARCH_NAMES, get_config
 from repro.core import QuantPolicy, make_train_step
-from repro.core.steps import default_bits, init_train_state
+from repro.core.steps import (apply_resume_extra, capture_resume_extra,
+                              default_bits, init_train_state)
 from repro.data import SyntheticLMDataset, StragglerTolerantLoader
 from repro.dist.api import activation_sharding_ctx, make_default_rules
 from repro.dist.pipeline import get_schedule
 from repro.dist.sharding import param_pspecs, to_named
+from repro.ft import FaultPlan
 from repro.launch.mesh import batch_axes, make_debug_mesh, pipe_axis_size
 from repro.models import lm
 from repro.optim import Hyper, OptimizerConfig, cosine_schedule
@@ -118,6 +127,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault-injection spec for recovery "
+                         "drills (falls back to REPRO_FAULT_PLAN), e.g. "
+                         "'crash@12;io@8x2;stall@5:0.5;flip@10;seed=7' or "
+                         "'crash@rand:8-20;seed=3' — see repro.ft.FaultPlan")
     ap.add_argument("--data", type=int, default=0,
                     help="data-axis size (0 = all devices)")
     ap.add_argument("--model", type=int, default=1)
@@ -182,10 +196,27 @@ def main(argv=None):
     opt_state = init_train_state(params, ocfg)
     start_step = 0
 
+    plan = FaultPlan.from_env(args.fault_plan)
+    if plan is not None:
+        print(f"[train] fault plan: {plan.describe()}", flush=True)
+
+    # restore BEFORE transport priming: the checkpoint's resume payload
+    # carries the killed run's measured transport decisions, and installing
+    # them first keeps the resumed collective schedule (and its numerics)
+    # identical instead of re-measuring on a possibly noisier machine
+    p_sh = to_named(param_pspecs(cfg, params, mesh), mesh)
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), ckpt_step, extra = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state),
+            shardings=(p_sh, None) if args.model > 1 else None)
+        start_step = apply_resume_extra(extra, cfg, ckpt_step)
+        print(f"[train] resumed from step {start_step}", flush=True)
+
     if args.overlap == "on" and args.transport == "auto" and n_data > 1:
         # measure ring-vs-psum EAGERLY for this model's per-layer dW leaf
         # sizes so the traced step consults real decisions, not the
-        # platform model (inside jit no measurement can run)
+        # platform model (inside jit no measurement can run); restored
+        # checkpoint decisions above are cache hits and are NOT re-measured
         from repro.dist.async_collectives import prime_transport_cache
         leaf_bytes = sorted({
             int(np.asarray(jnp.asarray(x).shape).prod() // cfg.num_layers) * 4
@@ -196,17 +227,14 @@ def main(argv=None):
         print(f"[train] transport autotuner (g={n_data}): {picks}",
               flush=True)
 
-    p_sh = to_named(param_pspecs(cfg, params, mesh), mesh)
-    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
-    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (params, opt_state), start_step, _ = restore_checkpoint(
-            args.ckpt_dir, (params, opt_state),
-            shardings=(p_sh, None) if args.model > 1 else None)
-        print(f"[train] resumed from step {start_step}", flush=True)
+    ckpt = (AsyncCheckpointer(args.ckpt_dir,
+                              fault=plan.ckpt_fault if plan else None)
+            if args.ckpt_dir else None)
 
     ds = SyntheticLMDataset(cfg.vocab_size, args.seq_len, args.global_batch)
-    loader = StragglerTolerantLoader(
-        lambda s: ds.batch_at(s), deadline_s=args.deadline_s)
+    fetch = plan.wrap_fetch(ds.batch_at) if plan else ds.batch_at
+    loader = StragglerTolerantLoader(fetch, deadline_s=args.deadline_s,
+                                     start_step=start_step)
 
     step_fn = jax.jit(
         make_train_step(
@@ -217,43 +245,68 @@ def main(argv=None):
             num_microbatches=args.microbatches if pipe_sched else None),
         donate_argnums=(0, 1))
 
+    def ckpt_extra(next_step):
+        return capture_resume_extra(cfg, next_step, loader=loader,
+                                    user_extra={"loss": losses[-1]})
+
+    def maybe_flip(next_step):
+        # bit-flip drills corrupt a LANDED checkpoint: join the async write
+        # first, then flip (the manifest keeps the original crc, so a later
+        # restore must detect the mismatch and fall back)
+        if plan is not None and next_step in plan.flip_steps():
+            ckpt.wait()
+            plan.corrupt_checkpoint(args.ckpt_dir, next_step)
+
     losses = []
     t0 = time.time()
-    with jax.set_mesh(mesh), activation_sharding_ctx(rules):
-        for step in range(start_step, args.steps):
-            batch = {k: jnp.asarray(v) for k, v in loader.get(step).items()}
-            # the synthetic LM loader only makes tokens/labels; encdec and
-            # vlm need their modality-side inputs too (deterministic per
-            # step, so checkpoint-resume replays the same stream)
-            bsz = batch["tokens"].shape[0]
-            if cfg.family == "encdec" and "frames" not in batch:
-                batch["frames"] = jax.random.normal(
-                    jax.random.fold_in(jax.random.key(2), step),
-                    (bsz, cfg.encoder_seq, cfg.d_model), jnp.float32)
-            if cfg.family == "vlm" and "patch_embeds" not in batch:
-                batch["patch_embeds"] = jax.random.normal(
-                    jax.random.fold_in(jax.random.key(3), step),
-                    (bsz, cfg.num_patches, cfg.d_model), jnp.float32)
-            hyper = Hyper(lr=jnp.float32(sched(step)), step=jnp.int32(step))
-            rng = (jax.random.fold_in(jax.random.key(1), step)
-                   if args.stochastic else None)
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 hyper, bits, rng)
-            losses.append(float(metrics["loss"]))
-            if step % args.log_every == 0 or step == args.steps - 1:
-                dt = time.time() - t0
-                print(f"step {step:5d} loss {losses[-1]:.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"lr {sched(step):.2e} {dt:.1f}s "
-                      f"data_skips={loader.skips}", flush=True)
-            if ckpt and step and step % args.ckpt_every == 0:
-                ckpt.save(step + 1, (params, opt_state),
-                          extra={"arch": cfg.name, "loss": losses[-1]})
-    if ckpt:
-        ckpt.save(args.steps, (params, opt_state),
-                  extra={"arch": cfg.name, "loss": losses[-1]})
-        ckpt.wait()
-    loader.close()
+    try:
+        with jax.set_mesh(mesh), activation_sharding_ctx(rules):
+            for step in range(start_step, args.steps):
+                if plan is not None:
+                    plan.check_crash(step)
+                batch = {k: jnp.asarray(v)
+                         for k, v in loader.get(step).items()}
+                # the synthetic LM loader only makes tokens/labels; encdec
+                # and vlm need their modality-side inputs too (deterministic
+                # per step, so checkpoint-resume replays the same stream)
+                bsz = batch["tokens"].shape[0]
+                if cfg.family == "encdec" and "frames" not in batch:
+                    batch["frames"] = jax.random.normal(
+                        jax.random.fold_in(jax.random.key(2), step),
+                        (bsz, cfg.encoder_seq, cfg.d_model), jnp.float32)
+                if cfg.family == "vlm" and "patch_embeds" not in batch:
+                    batch["patch_embeds"] = jax.random.normal(
+                        jax.random.fold_in(jax.random.key(3), step),
+                        (bsz, cfg.num_patches, cfg.d_model), jnp.float32)
+                hyper = Hyper(lr=jnp.float32(sched(step)),
+                              step=jnp.int32(step))
+                rng = (jax.random.fold_in(jax.random.key(1), step)
+                       if args.stochastic else None)
+                params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                     hyper, bits, rng)
+                losses.append(float(metrics["loss"]))
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    dt = time.time() - t0
+                    print(f"step {step:5d} loss {losses[-1]:.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"lr {sched(step):.2e} {dt:.1f}s "
+                          f"data_skips={loader.skips}", flush=True)
+                if ckpt and step and step % args.ckpt_every == 0:
+                    ckpt.save(step + 1, (params, opt_state),
+                              extra=ckpt_extra(step + 1))
+                    maybe_flip(step + 1)
+        if ckpt:
+            ckpt.save(args.steps, (params, opt_state),
+                      extra=ckpt_extra(args.steps))
+            ckpt.wait()
+            maybe_flip(args.steps)
+    finally:
+        # close() flushes the final in-flight write and surfaces any
+        # background error even when the loop raises; only an injected
+        # crash (os._exit) skips it — by design
+        if ckpt:
+            ckpt.close()
+        loader.close()
     print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({np.mean(losses[:5]):.3f} -> {np.mean(losses[-5:]):.3f} smoothed)",
           flush=True)

@@ -1,0 +1,358 @@
+"""Fault-injection harness + checkpoint integrity/recovery unit drills.
+
+The end-to-end kill/restart drills live in tests/test_recovery_drills.py;
+this file proves each mechanism in isolation: FaultPlan determinism, the
+checkpoint layer's checksum/verify/fallback/retry story, AsyncCheckpointer
+lifecycle, loader exception propagation and step-tag reconciliation, and
+the resume-extra capture/apply round trip.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.ckpt import (AsyncCheckpointer, latest_step, latest_valid_step,
+                        list_steps, restore_checkpoint, save_checkpoint,
+                        verify_checkpoint)
+from repro.data import DataProducerError, StragglerTolerantLoader
+from repro.ft import FAULT_EXIT_CODE, FaultPlan, flip_one_bit
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_and_describe():
+    p = FaultPlan.parse("crash@12;io@8x2;fsync@9;rename@9;stall@5:0.25;"
+                        "flip@10;seed=7")
+    assert p.seed == 7
+    assert p.crash_step() == 12
+    assert p.flip_steps() == [10]
+    kinds = sorted(e.kind for e in p.events)
+    assert kinds == ["crash", "flip", "fsync", "io", "rename", "stall"]
+    assert "io@8x2" in p.describe()
+
+
+def test_fault_plan_seeded_random_crash_step_is_deterministic():
+    a = FaultPlan.parse("crash@rand:8-20;seed=5").crash_step()
+    b = FaultPlan.parse("crash@rand:8-20;seed=5").crash_step()
+    c = FaultPlan.parse("crash@rand:8-20;seed=6").crash_step()
+    assert a == b and 8 <= a < 20
+    assert any(FaultPlan.parse(f"crash@rand:8-20;seed={s}").crash_step() != a
+               for s in range(10))  # the range is actually sampled
+    assert 8 <= c < 20
+
+
+def test_fault_plan_bad_specs_rejected():
+    for bad in ("crash12", "io@x", "boom@3", "crash@rand:9-9"):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+
+def test_fault_plan_env_and_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "crash@3")
+    assert FaultPlan.from_env(None).crash_step() == 3
+    assert FaultPlan.from_env("crash@9").crash_step() == 9  # flag wins
+    monkeypatch.delenv("REPRO_FAULT_PLAN")
+    assert FaultPlan.from_env(None) is None
+
+
+def test_ckpt_fault_budget_is_transient():
+    p = FaultPlan.parse("io@4x2")
+    with pytest.raises(OSError):
+        p.ckpt_fault("io", 4)
+    with pytest.raises(OSError):
+        p.ckpt_fault("io", 4)
+    p.ckpt_fault("io", 4)       # budget exhausted: no-op
+    p.ckpt_fault("io", 5)       # other steps never fire
+    p.ckpt_fault("fsync", 4)    # other kinds never fire
+    assert p.fired == [("io", 4), ("io", 4)]
+
+
+def test_wrap_fetch_stalls_only_the_planned_step():
+    p = FaultPlan.parse("stall@2:0.2")
+    fetch = p.wrap_fetch(lambda s: {"x": np.full((2,), s)})
+    t0 = time.monotonic()
+    fetch(1)
+    fast = time.monotonic() - t0
+    t0 = time.monotonic()
+    out = fetch(2)
+    slow = time.monotonic() - t0
+    assert slow >= 0.2 > fast
+    assert out["x"][0] == 2
+    assert ("stall", 2) in p.fired
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: checksums, verify, fallback, retry
+# ---------------------------------------------------------------------------
+
+def test_manifest_carries_checksums_and_verify_passes(tmp_path):
+    save_checkpoint(tmp_path, 3, tree())
+    assert verify_checkpoint(tmp_path, 3) == []
+    assert latest_valid_step(tmp_path) == 3
+
+
+def test_verify_detects_bit_flip(tmp_path):
+    save_checkpoint(tmp_path, 3, tree())
+    name = flip_one_bit(tmp_path, 3, seed=0)
+    assert name is not None
+    problems = verify_checkpoint(tmp_path, 3)
+    assert problems and "crc32 mismatch" in problems[0]
+    assert latest_valid_step(tmp_path) is None
+
+
+def test_restore_falls_back_past_corrupt_latest(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 2, t)
+    flip_one_bit(tmp_path, 2, seed=1)
+    assert latest_step(tmp_path) == 2           # pointer still says 2
+    assert latest_valid_step(tmp_path) == 1     # integrity says otherwise
+    with pytest.warns(RuntimeWarning, match="failed verification"):
+        restored, step, _ = restore_checkpoint(tmp_path, t)
+    assert step == 1
+    for a, b in zip(np.asarray(restored["a"]).ravel(),
+                    np.asarray(t["a"]).ravel()):
+        assert a == b
+
+
+def test_restore_pinned_corrupt_step_raises(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 2, t)
+    flip_one_bit(tmp_path, 2, seed=1)
+    with pytest.raises(ValueError, match="failed verification"):
+        restore_checkpoint(tmp_path, t, step=2)
+    # the valid pinned step still loads
+    _, step, _ = restore_checkpoint(tmp_path, t, step=1)
+    assert step == 1
+
+
+def test_restore_all_corrupt_raises_with_history(tmp_path):
+    t = tree()
+    for s in (1, 2):
+        save_checkpoint(tmp_path, s, t)
+        flip_one_bit(tmp_path, s, seed=s)
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+            restore_checkpoint(tmp_path, t)
+
+
+def test_missing_latest_pointer_falls_back_to_dirs(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 2, t)
+    (tmp_path / "LATEST").unlink()
+    assert latest_step(tmp_path) == 2
+    assert list_steps(tmp_path) == [1, 2]
+    _, step, _ = restore_checkpoint(tmp_path, t)
+    assert step == 2
+
+
+def test_save_retries_transient_io_failures(tmp_path):
+    plan = FaultPlan.parse("io@5x2")
+    with pytest.warns(RuntimeWarning, match="retrying"):
+        save_checkpoint(tmp_path, 5, tree(), fault=plan.ckpt_fault,
+                        backoff_s=0.01)
+    assert plan.fired == [("io", 5), ("io", 5)]
+    assert verify_checkpoint(tmp_path, 5) == []
+
+
+def test_save_retries_fsync_and_rename_failures(tmp_path):
+    plan = FaultPlan.parse("fsync@6x1;rename@6x1")
+    with pytest.warns(RuntimeWarning, match="retrying"):
+        save_checkpoint(tmp_path, 6, tree(), fault=plan.ckpt_fault,
+                        backoff_s=0.01)
+    assert ("fsync", 6) in plan.fired and ("rename", 6) in plan.fired
+    assert verify_checkpoint(tmp_path, 6) == []
+
+
+def test_save_exhausts_retries_and_raises(tmp_path):
+    plan = FaultPlan.parse("io@7x99")
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(OSError, match="injected io failure"):
+            save_checkpoint(tmp_path, 7, tree(), fault=plan.ckpt_fault,
+                            retries=2, backoff_s=0.01)
+    # the failed write never became visible
+    assert latest_step(tmp_path) is None
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer lifecycle
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_close_flushes_final_write(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(3, tree())
+    ck.close()  # no wait(): close must join the in-flight write
+    assert latest_step(tmp_path) == 3
+    ck.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        ck.save(4, tree())
+
+
+def test_async_checkpointer_context_manager(tmp_path):
+    with AsyncCheckpointer(tmp_path) as ck:
+        ck.save(1, tree())
+    assert latest_step(tmp_path) == 1
+
+
+def test_async_checkpointer_close_reraises_background_error(tmp_path):
+    plan = FaultPlan.parse("io@2x99")
+    ck = AsyncCheckpointer(tmp_path / "sub", fault=plan.ckpt_fault)
+    with pytest.warns(RuntimeWarning):
+        ck.save(2, tree())
+        with pytest.raises(OSError, match="injected io failure"):
+            ck.close()
+    # after surfacing, the error is cleared and close stays idempotent
+    ck.close()
+
+
+def test_async_checkpointer_fault_threads_through(tmp_path):
+    plan = FaultPlan.parse("io@3x1")
+    with pytest.warns(RuntimeWarning, match="retrying"):
+        with AsyncCheckpointer(tmp_path, fault=plan.ckpt_fault) as ck:
+            ck.save(3, tree())
+            ck.wait()
+    assert latest_step(tmp_path) == 3  # one transient failure absorbed
+
+
+# ---------------------------------------------------------------------------
+# StragglerTolerantLoader: exception propagation + step-tag reconciliation
+# ---------------------------------------------------------------------------
+
+def test_loader_propagates_producer_exception():
+    def fetch(step):
+        if step == 2:
+            raise RuntimeError("disk on fire")
+        return {"x": np.full((2,), step)}
+
+    loader = StragglerTolerantLoader(fetch, deadline_s=2.0, prefetch=1)
+    try:
+        assert loader.get(0)["x"][0] == 0
+        assert loader.get(1)["x"][0] == 1
+        with pytest.raises(DataProducerError, match="disk on fire"):
+            loader.get(2)
+        # latched: every later get re-raises instead of serving stale data
+        with pytest.raises(DataProducerError):
+            loader.get(3)
+    finally:
+        loader.close()
+
+
+def test_loader_discards_late_batch_for_skipped_step():
+    gate = threading.Event()
+
+    def fetch(step):
+        if step == 2:
+            gate.wait(5.0)  # straggler, released mid-test
+        return {"x": np.full((2,), step)}
+
+    loader = StragglerTolerantLoader(fetch, deadline_s=0.25, prefetch=1)
+    try:
+        assert loader.get(0)["x"][0] == 0
+        assert loader.get(1)["x"][0] == 1
+        sub = loader.get(2)           # deadline hit: substitute last batch
+        assert sub["x"][0] == 1 and loader.skips == 1
+        gate.set()                    # the late batch for step 2 now lands
+        got = loader.get(3)           # ... and must be DISCARDED, not served
+        assert got["x"][0] == 3
+        assert loader.stale_drops >= 1
+    finally:
+        loader.close()
+
+
+def test_loader_start_step_resumes_stream():
+    loader = StragglerTolerantLoader(
+        lambda s: {"x": np.full((2,), s)}, deadline_s=5.0, start_step=10)
+    try:
+        assert loader.get(10)["x"][0] == 10
+        assert loader.get(11)["x"][0] == 11
+    finally:
+        loader.close()
+
+
+# ---------------------------------------------------------------------------
+# Resume-extra capture/apply + transport-cache persistence
+# ---------------------------------------------------------------------------
+
+def test_transport_cache_snapshot_load_roundtrip():
+    from repro.dist.async_collectives import (
+        clear_transport_cache, decide_transport, load_transport_cache,
+        transport_cache_snapshot)
+    clear_transport_cache()
+    try:
+        fake = {"compressed=False,bytes=4096,g=8":
+                {"transport": "ring", "source": "measured", "us": {}}}
+        assert load_transport_cache(fake) == 1
+        # cache hit wins over the platform model (which would say psum on
+        # CPU) and over measurement (g=8 exceeds the host's devices anyway)
+        assert decide_transport(3000, 8) == "ring"
+        snap = transport_cache_snapshot()
+        key = "compressed=False,bytes=4096,g=8"
+        assert snap[key]["transport"] == "ring"
+        assert snap[key]["source"].startswith("restored:")
+        # existing entries are not clobbered without overwrite
+        fake2 = {key: {"transport": "psum", "source": "measured", "us": {}}}
+        assert load_transport_cache(fake2) == 0
+        assert decide_transport(3000, 8) == "ring"
+        assert load_transport_cache(fake2, overwrite=True) == 1
+        assert decide_transport(3000, 8) == "psum"
+        # malformed entries are skipped, not fatal
+        assert load_transport_cache({"garbage": {"transport": "ring"},
+                                     key: {"transport": "warp"}}) == 0
+    finally:
+        clear_transport_cache()
+
+
+def test_capture_and_apply_resume_extra(tmp_path):
+    from repro.configs import get_config
+    from repro.core.steps import apply_resume_extra, capture_resume_extra
+    from repro.dist.async_collectives import (clear_transport_cache,
+                                              decide_transport,
+                                              load_transport_cache)
+    cfg = get_config("qwen1.5-0.5b")
+    clear_transport_cache()
+    try:
+        load_transport_cache({"compressed=False,bytes=8192,g=4":
+                              {"transport": "ring", "source": "measured"}})
+        loader = StragglerTolerantLoader(
+            lambda s: {"x": np.zeros(2)}, deadline_s=2.0)
+        loader.get(0)
+        extra = capture_resume_extra(cfg, 7, loader=loader,
+                                     user_extra={"loss": 1.5})
+        loader.close()
+        assert extra["arch"] == cfg.name and extra["data_step"] == 7
+        assert extra["loss"] == 1.5
+        assert extra["loader"]["served"] == 1
+        assert "compressed=False,bytes=8192,g=4" in extra["transport_cache"]
+
+        # must round-trip the checkpoint manifest (msgpack)
+        save_checkpoint(tmp_path, 7, tree(), extra=extra)
+        _, _, extra2 = restore_checkpoint(tmp_path, tree())
+
+        clear_transport_cache()
+        step = apply_resume_extra(extra2, cfg, 7)
+        assert step == 7
+        assert decide_transport(8000, 4) == "ring"  # reinstalled
+    finally:
+        clear_transport_cache()
+
+    other = get_config("gemma-7b")
+    with pytest.raises(ValueError, match="refusing to resume"):
+        apply_resume_extra({"arch": cfg.name}, other, 7)
+    # pre-schema checkpoints fall back to the checkpoint step
+    assert apply_resume_extra({}, cfg, 9) == 9
+
+
+def test_fault_exit_code_is_distinct():
+    assert FAULT_EXIT_CODE not in (0, 1, 2)

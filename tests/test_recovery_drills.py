@@ -1,0 +1,191 @@
+"""End-to-end recovery drills: the training loop must survive kills,
+corrupt checkpoints, and topology changes.
+
+Each drill runs the REAL driver (``repro.launch.train``) in a subprocess
+with an injected fault plan (``--fault-plan`` / ``REPRO_FAULT_PLAN``) and
+asserts the recovery contract from the checkpoint layer's docstring:
+
+* kill at a seeded-random step + restart on the SAME device count resumes
+  **bitwise** — final params, optimizer state, and the logged per-step
+  losses are identical to an uninterrupted run (stochastic-rounding RNG,
+  data stream, and LR schedule are all step-indexed);
+* restart on a DIFFERENT device count (elastic reshard) matches the
+  uninterrupted run within a small float tolerance (the data-parallel
+  reduction order changes, nothing else);
+* a corrupted newest checkpoint is detected by checksum, warned about
+  loudly, and recovery falls back to the previous valid checkpoint.
+
+CI runs this file with ``REPRO_DRILL_DEVICES=4`` on the 4-device job;
+locally it defaults to a single device to stay fast.
+"""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.ft import FAULT_EXIT_CODE
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEVICES = int(os.environ.get("REPRO_DRILL_DEVICES", "1"))
+
+
+def run_driver(*extra, devices=DEVICES, expect_code=0, timeout=600):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.pop("REPRO_FAULT_PLAN", None)  # drills pass plans explicitly
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen1.5-0.5b", "--reduced", "--seq-len", "32",
+           "--global-batch", "8", "--lr", "3e-2", "--log-every", "1",
+           *extra]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == expect_code, (
+        f"expected exit {expect_code}, got {out.returncode}\n"
+        f"stdout: {out.stdout[-2000:]}\nstderr: {out.stderr[-3000:]}")
+    return out
+
+
+def step_losses(stdout):
+    """{step: formatted-loss-string} — string compare = bitwise compare."""
+    return {int(m.group(1)): m.group(2) for m in
+            re.finditer(r"step\s+(\d+) loss (\d+\.\d+)", stdout)}
+
+
+def manifest_crcs(ck, step):
+    cdir = pathlib.Path(ck) / f"step_{step:08d}"
+    m = msgpack.unpackb((cdir / "manifest.msgpack").read_bytes())
+    return {e["path"]: (int(e["crc32"]), int(e["nbytes"]))
+            for e in m["leaves"]}
+
+
+def load_leaves(ck, step):
+    cdir = pathlib.Path(ck) / f"step_{step:08d}"
+    m = msgpack.unpackb((cdir / "manifest.msgpack").read_bytes())
+    return {e["path"]: np.load(cdir / e["file"], allow_pickle=False)
+            for e in m["leaves"]}
+
+
+@pytest.mark.slow
+def test_kill_at_seeded_step_resumes_bitwise(tmp_path):
+    """Kill at a seeded-random step; restart must be bitwise identical to an
+    uninterrupted run — including the stochastic-rounding RNG stream."""
+    common = ("--steps", "12", "--ckpt-every", "4",
+              "--quantize", "--stochastic")
+    ref_ck, ck = tmp_path / "ref", tmp_path / "ck"
+
+    ref0 = run_driver(*common, "--ckpt-dir", str(ref_ck))
+    ref = run_driver(*common, "--ckpt-dir", str(ref_ck))
+    # the baseline itself must be run-to-run deterministic, or "bitwise
+    # resume" would be unfalsifiable
+    assert step_losses(ref.stdout) == step_losses(ref0.stdout)
+    assert step_losses(ref.stdout), ref.stdout[-1000:]
+
+    # the crash step is drawn from the plan seed inside [6, 11)
+    killed = run_driver(*common, "--ckpt-dir", str(ck),
+                        "--fault-plan", "crash@rand:6-11;seed=5",
+                        expect_code=FAULT_EXIT_CODE)
+    m = re.search(r"injected crash at step (\d+)", killed.stderr)
+    assert m, killed.stderr[-2000:]
+    crash_step = int(m.group(1))
+    assert 6 <= crash_step < 11
+    # the kill really was mid-run: no final checkpoint landed
+    assert not (ck / "step_00000012").exists()
+
+    resumed = run_driver(*common, "--ckpt-dir", str(ck), "--resume")
+    rm = re.search(r"resumed from step (\d+)", resumed.stdout)
+    assert rm, resumed.stdout[-2000:]
+    resume_step = int(rm.group(1))
+    assert 0 < resume_step <= crash_step
+
+    # bitwise: every param/optimizer leaf of the final checkpoint matches
+    assert manifest_crcs(ck, 12) == manifest_crcs(ref_ck, 12)
+    # ... and the logged losses after resume match the reference run's
+    ref_losses = step_losses(ref.stdout)
+    res_losses = step_losses(resumed.stdout)
+    assert res_losses, resumed.stdout[-1000:]
+    for step, loss in res_losses.items():
+        assert loss == ref_losses[step], (
+            f"step {step}: resumed loss {loss} != reference {ref_losses[step]}")
+
+
+@pytest.mark.slow
+def test_corrupt_latest_falls_back_with_loud_warning(tmp_path):
+    """Bit-flip the newest checkpoint; resume must detect it via checksum,
+    warn, and recover from the previous valid checkpoint."""
+    ck = tmp_path / "ck"
+    # flip@12 corrupts the final checkpoint (data-step label 12) after it
+    # lands; checkpoints at labels 5 and 9 stay valid
+    run_driver("--steps", "12", "--ckpt-every", "4", "--ckpt-dir", str(ck),
+               "--fault-plan", "flip@12")
+    assert (ck / "step_00000012").exists()
+
+    resumed = run_driver("--steps", "16", "--ckpt-every", "4",
+                         "--ckpt-dir", str(ck), "--resume")
+    assert "failed verification" in resumed.stderr, resumed.stderr[-3000:]
+    assert re.search(r"recovered from checkpoint step 9", resumed.stderr)
+    assert "resumed from step 9" in resumed.stdout, resumed.stdout[-2000:]
+    # the continued run writes a fresh valid final checkpoint
+    assert (ck / "step_00000016").exists()
+
+
+@pytest.mark.slow
+def test_transient_ckpt_io_failures_are_absorbed(tmp_path):
+    """Two injected IO failures during a checkpoint write retry and succeed;
+    the run exits clean with a valid final checkpoint."""
+    ck = tmp_path / "ck"
+    out = run_driver("--steps", "8", "--ckpt-every", "4",
+                     "--ckpt-dir", str(ck),
+                     "--fault-plan", "io@5x2")
+    assert "retrying" in out.stderr, out.stderr[-3000:]
+    assert (ck / "step_00000008").exists()
+    from repro.ckpt import verify_checkpoint
+    assert verify_checkpoint(ck, 5) == []
+    assert verify_checkpoint(ck, 8) == []
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(DEVICES > 1, reason="drill pins its own device counts")
+def test_elastic_resume_on_different_device_count(tmp_path):
+    """Train 8 steps on 1 device, resume on 2: the final params must match
+    the uninterrupted 1-device run within float tolerance.  Only the
+    data-parallel reduction order changes, so the tolerance is small; it is
+    documented in the README's resume-guarantees table."""
+    ref_ck, ck = tmp_path / "ref", tmp_path / "ck"
+    run_driver("--steps", "12", "--ckpt-every", "4",
+               "--ckpt-dir", str(ref_ck), devices=1)
+    run_driver("--steps", "8", "--ckpt-every", "4",
+               "--ckpt-dir", str(ck), devices=1)
+
+    resumed = run_driver("--steps", "12", "--ckpt-every", "4",
+                         "--ckpt-dir", str(ck), "--resume", devices=2)
+    assert "'data': 2" in resumed.stdout, resumed.stdout[-2000:]
+    assert "resumed from step 8" in resumed.stdout
+
+    ref, got = load_leaves(ref_ck, 12), load_leaves(ck, 12)
+    assert set(ref) == set(got)
+    worst = 0.0
+    for path in ref:
+        a, b = ref[path].astype(np.float64), got[path].astype(np.float64)
+        scale = max(np.abs(a).max(), 1e-8)
+        worst = max(worst, float(np.abs(a - b).max() / scale))
+        np.testing.assert_allclose(
+            a, b, rtol=5e-3, atol=5e-3 * scale,
+            err_msg=f"{path} diverged beyond the elastic-resume tolerance")
+    print(f"[drill] elastic resume worst relative divergence: {worst:.2e}")
+
+
+@pytest.mark.slow
+def test_straggler_stall_does_not_break_resume(tmp_path):
+    """A stalled fetch past the deadline is substituted (not fatal), and the
+    run still checkpoints and finishes clean."""
+    ck = tmp_path / "ck"
+    out = run_driver("--steps", "8", "--ckpt-every", "4",
+                     "--ckpt-dir", str(ck), "--deadline-s", "0.3",
+                     "--fault-plan", "stall@3:2.0")
+    assert (ck / "step_00000008").exists()
+    assert len(step_losses(out.stdout)) >= 6

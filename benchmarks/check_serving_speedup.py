@@ -1,0 +1,73 @@
+"""Hard serving gate: the paged redesign must be a measured WIN.
+
+    python benchmarks/check_serving_speedup.py --fresh BENCH_serving.fresh.json
+
+Reads the fresh serving-suite JSON and fails (exit 1) when the
+``serving/paged_chunked`` row's ``speedup`` (= its tokens/sec over the
+``serving/contiguous`` row's, measured in the same run) is not above the
+threshold.  The redesign's pitch is throughput — chunked prefill keeps
+decode ticking during admission, prefix sharing skips recomputing the
+shared system prompt, int8 KV quarters the pool-gather bandwidth — and
+this gate makes "paged is actually slower than the legacy contiguous
+slots" fail loudly instead of shipping as a row nobody reads.
+
+A fresh file with no ``serving/paged_chunked`` row at all is an error:
+the suite silently not emitting the gated measurement must not read as a
+pass.  Unlike the overlap gate there is no device-count escape hatch —
+the comparison is single-process and runs anywhere the suite runs.
+
+``--min-speedup`` defaults to 1.0; REPRO_SERVING_MIN_SPEEDUP overrides
+it (CI escape hatch, mirroring REPRO_OVERLAP_MIN_SPEEDUP).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def find_row(rows: list, name: str):
+    for r in rows:
+        if r.get("name") == name:
+            return r
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="fresh serving-suite JSON (benchmarks.run --json)")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required paged-over-contiguous tokens/sec ratio "
+                         "(default 1.0: the redesign must not lose)")
+    args = ap.parse_args(argv)
+    min_speedup = float(os.environ.get("REPRO_SERVING_MIN_SPEEDUP",
+                                       args.min_speedup))
+
+    with open(args.fresh) as f:
+        rows = json.load(f)
+    row = find_row(rows, "serving/paged_chunked")
+    if row is None:
+        print("error: no serving/paged_chunked row in the fresh run — "
+              "the serving suite did not produce the gated measurement")
+        return 1
+    speedup = row.get("speedup")
+    if speedup is None:
+        print("error: serving/paged_chunked row carries no speedup field "
+              "— cannot gate")
+        return 1
+    if speedup < min_speedup:
+        print(f"FAIL serving/paged_chunked: speedup x{speedup:.3f} < "
+              f"x{min_speedup:.2f} — the paged+chunked+prefix-shared path "
+              f"is a measured slowdown vs whole-prompt contiguous slots "
+              f"(pool gather, tick interleave, or admission regressed)")
+        return 1
+    print(f"serving speedup gate OK: x{speedup:.3f} >= x{min_speedup:.2f} "
+          f"({row.get('tok_per_s')} tok/s paged vs contiguous baseline, "
+          f"{row.get('prefix_hits')} prefix hits)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.dist.pipeline import get_schedule, pipeline_apply
 from repro.models import lm
@@ -103,7 +103,7 @@ def run(quick: bool = False):
     reps = 3 if quick else 10
     for engine in ("taxonn", "autodiff"):
         step = jax.jit(make_train_step(cfg, QuantPolicy.off(), ocfg,
-                                       engine=engine))
+                                       StepOptions(engine=engine)))
         p, o, m = step(params, opt, batch, hyper, bits)  # compile+warm
         jax.block_until_ready(m["loss"])
         t0 = time.time()
@@ -183,8 +183,9 @@ def run(quick: bool = False):
         scan_step = jax.jit(make_train_step(fcfg, pol, ocfg))
         _, _, m_scan = scan_step(fparams, fopt, fbatch, hyper, fbits)
         pipe_step = jax.jit(make_train_step(
-            fcfg, pol, ocfg, pipeline_schedule="1f1b", pipeline_stages=4,
-            num_microbatches=4))
+            fcfg, pol, ocfg, StepOptions(pipeline_schedule="1f1b",
+                                         pipeline_stages=4,
+                                         num_microbatches=4)))
         p, o, m = pipe_step(fparams, fopt, fbatch, hyper, fbits)
         jax.block_until_ready(m["loss"])
         bit_exact = int(float(m["loss"]) == float(m_scan["loss"]))
@@ -211,7 +212,8 @@ def run(quick: bool = False):
     # engine: the weight update ops live in the backward scan body ->
     # the jaxpr has no full-tree gradient outputs outside scans.
     tax = jax.make_jaxpr(
-        make_train_step(cfg, QuantPolicy.off(), ocfg, engine="taxonn"))(
+        make_train_step(cfg, QuantPolicy.off(), ocfg,
+                        StepOptions(engine="taxonn")))(
         params, opt, batch, hyper, bits)
     scans = [e for e in tax.jaxpr.eqns if e.primitive.name == "scan"]
     rows.append({

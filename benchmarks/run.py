@@ -20,6 +20,9 @@ via ``benchmarks/check_regression.py``, and uploads both as artifacts.
   roofline    — (beyond paper)    (dry-run roofline summary)
   ckpt        — (beyond paper)    (async save overhead per step, restore
                                    latency, integrity-scan cost)
+  serving     — (beyond paper)    (paged+chunked+prefix-shared continuous
+                                   batching vs contiguous slots; int8 vs
+                                   bf16 KV; tokens/sec and p50/p99)
 """
 from __future__ import annotations
 
@@ -40,7 +43,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ckpt_bench, convergence, kernels_bench, overhead,
-                            overlap, pipeline, roofline, savings)
+                            overlap, pipeline, roofline, savings,
+                            serving_bench)
     suites = {
         "convergence": convergence.run,
         "overhead": overhead.run,
@@ -50,6 +54,7 @@ def main() -> None:
         "overlap": overlap.run,
         "roofline": roofline.run,
         "ckpt": ckpt_bench.run,
+        "serving": serving_bench.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -1,0 +1,158 @@
+"""Serving-path cost: what the paged redesign buys over contiguous slots.
+
+Replays one seeded open-loop arrival trace — every prompt shares a long
+system prefix, then diverges — through three scheduler variants built on
+the SAME model params:
+
+  serving/contiguous     legacy per-slot contiguous KV, whole-prompt
+                         prefill on admission (the pre-redesign baseline,
+                         float32 as it shipped)
+  serving/paged_chunked  the redesign's serving design point: paged block
+                         pool + chunked prefill + prefix sharing + int8
+                         KV (per-token scales); carries ``speedup`` = its
+                         tokens/sec over the contiguous row's (gated
+                         >= 1.0 by benchmarks/check_serving_speedup.py)
+  serving/kv_f32         dtype ablation: same paged path, float32 KV
+  serving/kv_bf16        dtype ablation: bfloat16 KV; carries
+                         ``int8_speedup`` (design point over this row) —
+                         on CPU CI bf16 is emulated, so this overstates
+                         the int8 win vs real accelerator bf16
+
+Every row reports tokens/sec and per-request completion-latency p50/p99
+(submit-to-done, milliseconds).  ``us_per_call`` is per generated token.
+Each variant drains a short warmup trace first so the jitted
+prefill/decode closures are compiled before the measured replay, and the
+measured replay runs twice with the best wall-clock kept (CPU CI noise).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+PREFIX_LEN = 448         # shared system prefix (the prefix-sharing payload)
+SUFFIX_LEN = 64          # per-request unique tail
+MAX_NEW = 8
+BLOCK = 32
+CHUNK = 256              # prefill token budget per tick (paged)
+
+
+def _cfg():
+    return ModelConfig(
+        name="bench-serve", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=512,
+        compute_dtype="float32", logit_chunk=64)
+
+
+def _trace(cfg, n_req, seed=0):
+    """Open-loop arrival trace: fixed-length prompts, shared prefix."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(0, cfg.vocab_size,
+                              size=(PREFIX_LEN,)).astype(np.int32)
+    reqs = []
+    for i in range(n_req):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=(SUFFIX_LEN,)).astype(np.int32)
+        reqs.append(Request(uid=i,
+                            prompt=np.concatenate([sys_prefix, tail]),
+                            max_new_tokens=MAX_NEW))
+    return reqs
+
+
+def _drain(sched, reqs):
+    """Submit the whole trace, step to drained; per-request latencies."""
+    for r in reqs:
+        sched.submit(r)
+    t0 = time.perf_counter()
+    lat, live = [], list(reqs)
+    while live:
+        sched.step()
+        now = time.perf_counter()
+        lat += [now - t0 for r in live if r.done]
+        live = [r for r in live if not r.done]
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    return wall, toks, sorted(lat)
+
+
+def _variant(params, cfg, serve, n_req, seed):
+    """Warmed, best-of-2 replay of the trace through one scheduler config.
+
+    One EngineHooks (= one set of jitted closures) serves the warmup and
+    both measured replays, so compile time never lands in the numbers.
+    """
+    from repro.serving import BatchScheduler, EngineHooks
+    hooks = EngineHooks.for_model(params, cfg, serve)
+
+    def replay(n, seed):
+        sched = BatchScheduler(serve, EngineHooks(
+            prefill=hooks.prefill, decode=hooks.decode, merge=hooks.merge,
+            prefill_chunk=hooks.prefill_chunk, copy_block=hooks.copy_block,
+            init_state=jax.tree.map(lambda x: x.copy(), hooks.init_state)))
+        wall, toks, lat = _drain(sched, _trace(cfg, n, seed))
+        return wall, toks, lat, sched
+
+    replay(2, seed=99)                      # compile warmup, tiny trace
+    best = None
+    for _ in range(2):
+        wall, toks, lat, sched = replay(n_req, seed)
+        if best is None or wall < best[0]:
+            best = (wall, toks, lat, sched)
+    wall, toks, lat, sched = best
+    return {"us_per_call": wall * 1e6 / toks,
+            "tok_per_s": round(toks / wall, 2),
+            "p50_ms": round(1e3 * lat[len(lat) // 2], 1),
+            "p99_ms": round(1e3 * lat[min(len(lat) - 1,
+                                          int(len(lat) * 0.99))], 1),
+            "n_requests": len(lat),
+            "tokens": toks}, sched
+
+
+def run(quick: bool = False):
+    from repro.serving import ServeConfig
+
+    cfg = _cfg()
+    params = lm.init_params(jax.random.key(0), cfg)
+    n_req = 6 if quick else 12
+    max_len = 576
+    common = dict(num_slots=4, eos_id=None, max_len=max_len)
+    rows = []
+
+    contig = ServeConfig(mode="contiguous", cache_dtype="float32", **common)
+    r_c, _ = _variant(params, cfg, contig, n_req, seed=0)
+    rows.append({"name": "serving/contiguous",
+                 "cache_dtype": "float32", **r_c})
+
+    # pool sized for the trace: per-slot footprints + the prefix index,
+    # which retains the shared prefix AND each request's registered tail
+    # blocks until release_prefix_cache()
+    n_blocks = (1 + 4 * (max_len // BLOCK + 2)
+                + n_req * (-(-SUFFIX_LEN // BLOCK) + 1)
+                + PREFIX_LEN // BLOCK)
+    paged = ServeConfig(mode="paged", cache_dtype="int8",
+                        block_size=BLOCK, prefill_chunk=CHUNK,
+                        num_blocks=n_blocks, **common)
+    r_p, sched = _variant(params, cfg, paged, n_req, seed=0)
+    rows.append({"name": "serving/paged_chunked", "cache_dtype": "int8",
+                 **r_p,
+                 "speedup": round(r_p["tok_per_s"] / r_c["tok_per_s"], 3),
+                 "prefix_hits": sched.stats["prefix_hits"],
+                 "reused_tokens": sched.stats["reused_tokens"],
+                 "cow_copies": sched.stats["cow_copies"]})
+
+    r_f32, _ = _variant(
+        params, cfg, paged.replace(cache_dtype="float32"), n_req, seed=0)
+    rows.append({"name": "serving/kv_f32", "cache_dtype": "float32",
+                 **r_f32})
+    r_bf, _ = _variant(
+        params, cfg, paged.replace(cache_dtype="bfloat16"), n_req, seed=0)
+    rows.append({"name": "serving/kv_bf16", "cache_dtype": "bfloat16",
+                 **r_bf,
+                 "int8_speedup": round(r_p["tok_per_s"] / r_bf["tok_per_s"],
+                                       3)})
+    return rows

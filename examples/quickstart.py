@@ -5,7 +5,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.data import SyntheticLMDataset
 from repro.models import lm
@@ -24,7 +24,8 @@ opt = init_train_state(params, ocfg)
 bits = default_bits(cfg, enabled=True)
 policy = QuantPolicy(grad_scale=64.0)
 
-step = jax.jit(make_train_step(cfg, policy, ocfg, engine="taxonn"))
+step = jax.jit(make_train_step(cfg, policy, ocfg,
+                               StepOptions(engine="taxonn")))
 ds = SyntheticLMDataset(cfg.vocab_size, seq_len=64, global_batch=8)
 
 for i in range(50):

@@ -6,7 +6,7 @@ from repro.core.taxonn import (
     forward_stack,
     backward_stack,
 )
-from repro.core.steps import make_train_step, make_eval_step
+from repro.core.steps import StepOptions, make_train_step, make_eval_step
 from repro.core.lenet import (
     LeNetBits,
     init_lenet_params,
@@ -18,7 +18,7 @@ from repro.core.lenet import (
 
 __all__ = [
     "QuantPolicy", "default_bits_for", "forward_stack", "backward_stack",
-    "make_train_step", "make_eval_step",
+    "StepOptions", "make_train_step", "make_eval_step",
     "LeNetBits", "init_lenet_params", "lenet_bits", "lenet_bits_off",
     "lenet_bits_table", "make_lenet_train_step",
 ]

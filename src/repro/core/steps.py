@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -486,15 +487,101 @@ def _pipeline_metrics(pipeline_schedule, pipeline_stages, num_microbatches):
     }
 
 
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    """Everything that selects HOW a train step executes, in one frozen
+    value — the successor of ``make_train_step``'s kwarg sprawl (engine,
+    kernel_backend, pipeline_*, overlap, transport each arrived as a new
+    keyword in a different PR).  ``None`` fields defer to the policy
+    (kernel_backend/overlap/transport) or mean "feature off" (pipeline_*).
+
+    Build one directly, or seed it from a policy's knobs and override:
+
+        opts = StepOptions(engine="autodiff")
+        opts = StepOptions.from_policy(policy, overlap="on")
+        step = make_train_step(cfg, policy, ocfg, opts)
+    """
+
+    engine: str = "taxonn"
+    kernel_backend: Optional[str] = None
+    pipeline_schedule: Any = None
+    pipeline_stages: Optional[int] = None
+    num_microbatches: Optional[int] = None
+    overlap: Optional[str] = None
+    transport: Optional[str] = None
+
+    def __post_init__(self):
+        if self.engine not in ("taxonn", "autodiff"):
+            raise ValueError(f"engine must be 'taxonn' or 'autodiff', "
+                             f"got {self.engine!r}")
+        if self.kernel_backend not in (None, "off", "emulate", "int8", "auto"):
+            raise ValueError(f"kernel_backend must be 'off', 'emulate', "
+                             f"'int8' or 'auto', got {self.kernel_backend!r}")
+        if self.overlap not in (None, "off", "on"):
+            raise ValueError(f"overlap must be 'off' or 'on', "
+                             f"got {self.overlap!r}")
+        if self.transport not in (None, "auto", "ring", "psum", "scatter"):
+            raise ValueError(f"transport must be 'auto', 'ring', 'psum' or "
+                             f"'scatter', got {self.transport!r}")
+
+    @classmethod
+    def from_policy(cls, policy: QuantPolicy, **overrides) -> "StepOptions":
+        """Seed the execution knobs from the policy's own fields (the
+        values ``make_train_step`` would resolve to anyway), then apply
+        explicit overrides — handy when one policy drives several step
+        variants."""
+        base = dict(kernel_backend=policy.kernel_backend,
+                    overlap=policy.overlap,
+                    transport=policy.dw_transport)
+        base.update(overrides)
+        return cls(**base)
+
+    def replace(self, **kw) -> "StepOptions":
+        return dataclasses.replace(self, **kw)
+
+
+_DEPRECATED_STEP_KWARGS = ("engine", "kernel_backend", "pipeline_schedule",
+                           "pipeline_stages", "num_microbatches", "overlap",
+                           "transport")
+
+
 def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                     optim_cfg: Optional[OptimizerConfig] = None,
-                    engine: str = "taxonn",
-                    kernel_backend: Optional[str] = None,
-                    pipeline_schedule=None,
-                    pipeline_stages: Optional[int] = None,
-                    num_microbatches: Optional[int] = None,
-                    overlap: Optional[str] = None,
-                    transport: Optional[str] = None):
+                    options: Optional[StepOptions] = None,
+                    **deprecated_kwargs):
+    """Build the train step described by ``options`` (a ``StepOptions``).
+
+    The legacy per-knob keywords (``engine=``, ``kernel_backend=``,
+    ``pipeline_schedule=``, ``pipeline_stages=``, ``num_microbatches=``,
+    ``overlap=``, ``transport=``) still work through a shim that folds
+    them into a ``StepOptions`` and emits a ``DeprecationWarning`` — new
+    code should pass ``options=StepOptions(...)`` instead.
+    """
+    if deprecated_kwargs:
+        unknown = set(deprecated_kwargs) - set(_DEPRECATED_STEP_KWARGS)
+        if unknown:
+            raise TypeError(f"make_train_step got unexpected keyword "
+                            f"arguments {sorted(unknown)}")
+        warnings.warn(
+            f"make_train_step kwargs {sorted(deprecated_kwargs)} are "
+            f"deprecated; pass options=StepOptions(...) instead",
+            DeprecationWarning, stacklevel=2)
+        if options is not None:
+            clash = [k for k, v in deprecated_kwargs.items()
+                     if getattr(options, k) is not None and v is not None
+                     and (k != "engine" or v != options.engine)]
+            if clash:
+                raise ValueError(f"both options= and legacy kwargs set "
+                                 f"{sorted(clash)}")
+        options = dataclasses.replace(options or StepOptions(),
+                                      **deprecated_kwargs)
+    options = options or StepOptions()
+    return _make_train_step(cfg, policy, optim_cfg, options)
+
+
+def _make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy],
+                     optim_cfg: Optional[OptimizerConfig],
+                     options: StepOptions):
     """``kernel_backend`` overrides ``policy.kernel_backend`` ("off" |
     "emulate" | "int8" | "auto"; auto = off on CPU, int8 on TPU) and selects
     the datapath for the dense-unit matmuls in the step's hot loops.
@@ -529,21 +616,19 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
     ``step.pipeline_schedule``.
     """
     policy = policy or QuantPolicy.off()
-    if overlap is not None:
-        if overlap not in ("off", "on"):
-            raise ValueError(f"overlap must be 'off' or 'on', got {overlap!r}")
-        policy = dataclasses.replace(policy, overlap=overlap)
-    if transport is not None:
-        if transport not in ("auto", "ring", "psum", "scatter"):
-            raise ValueError(f"transport must be 'auto', 'ring', 'psum' or "
-                             f"'scatter', got {transport!r}")
-        policy = dataclasses.replace(policy, dw_transport=transport)
+    if options.overlap is not None:
+        policy = dataclasses.replace(policy, overlap=options.overlap)
+    if options.transport is not None:
+        policy = dataclasses.replace(policy, dw_transport=options.transport)
     optim_cfg = optim_cfg or OptimizerConfig()
     backend = resolve_backend(
-        kernel_backend if kernel_backend is not None
+        options.kernel_backend if options.kernel_backend is not None
         else getattr(policy, "kernel_backend", "auto"))
+    engine = options.engine
+    pipeline_stages = options.pipeline_stages
     sched, pipe_metrics = _pipeline_metrics(
-        pipeline_schedule, pipeline_stages, num_microbatches)
+        options.pipeline_schedule, options.pipeline_stages,
+        options.num_microbatches)
 
     if engine == "autodiff":
         def auto_step(params, opt_state, batch, hyper: Hyper, bits=None,
@@ -637,7 +722,8 @@ def make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         if pipe_exec:
             # stage-sharded execution through dist.pipeline: the bodies run
             # per-microbatch, so they need microbatch-shaped positions
-            S_pipe, M_pipe = int(pipeline_stages), int(num_microbatches or 1)
+            S_pipe = int(pipeline_stages)
+            M_pipe = int(options.num_microbatches or 1)
             if bsz % M_pipe:
                 raise ValueError(f"global batch {bsz} does not divide into "
                                  f"num_microbatches={M_pipe}")

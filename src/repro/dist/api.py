@@ -94,6 +94,14 @@ def make_default_rules(batch_axes: Iterable[str],
         "v": "model",
         "e": UNCONSTRAINED,
         "c": UNCONSTRAINED,
+        # paged-KV serving pool [L, N_blocks, block, kv_heads, head_dim]
+        # tagged "lnshd": the block axis shards over the data axes (each
+        # data shard owns a slice of the pool) and KV heads over "model"
+        # (classic TP serving); layer / in-block slot / head_dim replicate
+        "l": None,
+        "n": batch_axes,
+        "s": None,
+        "h": "model",
     }
 
 
@@ -151,7 +159,8 @@ def _axis_size(mesh_shape: dict, entry) -> int:
 # seq_parallel: 't' and 'v' both want "model"), the lower number wins and
 # the loser replicates.  Vocab beats sequence: the CE head's masked-target
 # reduction is collective-free only with V sharded (see lm.ce_from_weight).
-_AXIS_PRIORITY = {"b": 0, "v": 1, "e": 2, "c": 2, "d": 3, "t": 4}
+_AXIS_PRIORITY = {"b": 0, "n": 0, "v": 1, "h": 1, "e": 2, "c": 2, "d": 3,
+                  "t": 4, "l": 5, "s": 5}
 
 
 def _spec_for(logical: str, ndim: int, rules: dict, mesh,

@@ -158,6 +158,29 @@ def tune_blocks(m: int, n: int, k: int, itemsize: int = 4,
     return best
 
 
+@functools.lru_cache(maxsize=None)
+def tune_paged(num_blocks: int, block_size: int, max_blocks_per_seq: int,
+               kv_heads: int, head_dim: int, groups: int,
+               itemsize: int = 4) -> Optional[int]:
+    """VMEM budget for the paged-attention kernel (sibling of
+    ``tune_blocks``, same 8MB budget): the block pool stays resident in
+    VMEM while each grid step gathers + dequantizes one slot's blocks into
+    a [max_blocks*block, kv_heads, head_dim] scratch and runs the fused
+    softmax over the expanded heads.  Returns the resident byte count when
+    the kernel fits, None -> callers fall back to the jnp gather path.
+    """
+    if block_size < 1 or head_dim % 8 != 0:
+        return None
+    t = max_blocks_per_seq * block_size
+    pool = 2 * num_blocks * block_size * kv_heads * head_dim * itemsize
+    if itemsize == 1:  # int8 payload rides with per-token f32 scales
+        pool += 2 * num_blocks * block_size * 4
+    gathered = 2 * t * kv_heads * head_dim * 4
+    scores = (kv_heads * groups) * t * 4
+    total = pool + gathered + scores
+    return total if total <= VMEM_BUDGET_BYTES else None
+
+
 def tune_fused(t: int, din: int, dout: int, itemsize: int = 4,
                acc_itemsize: int = 4,
                double_buffer: bool = True) -> Optional[int]:

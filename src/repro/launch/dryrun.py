@@ -29,7 +29,7 @@ from repro.configs import (
     ARCH_NAMES, get_config, input_specs, param_specs, SHAPE_CELLS,
     SHAPES_BY_NAME, cell_is_applicable,
 )
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.dist.api import (activation_sharding_ctx, make_default_rules,
                             perf_options_ctx)
@@ -72,11 +72,12 @@ def build_cell(cfg: ModelConfig, cell, mesh, pipe=None):
     if cell.kind == "train":
         ocfg = OptimizerConfig(kind="sgd")
         policy = QuantPolicy(grad_scale=128.0)  # paper-faithful: quant ON
-        pipe_kw = {}
+        opts = StepOptions(engine="taxonn")
         if pipe is not None:
-            pipe_kw = dict(pipeline_schedule=pipe[0], pipeline_stages=pipe[1],
-                           num_microbatches=pipe[2])
-        step = make_train_step(cfg, policy, ocfg, engine="taxonn", **pipe_kw)
+            opts = opts.replace(pipeline_schedule=pipe[0],
+                                pipeline_stages=pipe[1],
+                                num_microbatches=pipe[2])
+        step = make_train_step(cfg, policy, ocfg, opts)
         opt_specs = jax.eval_shape(lambda p: init_train_state(p, ocfg), p_specs)
         opt_sh = to_named(opt_pspecs(
             cfg, opt_specs, param_pspecs(cfg, p_specs, mesh), mesh), mesh)

@@ -1,11 +1,12 @@
 """Serving driver: continuous-batching decode over the slot scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --requests 8 --max-new 16
+        --reduced --requests 8 --max-new 16 [--mode paged|contiguous]
 
-Demonstrates the production serving path: prefill per admitted request,
-slot-based continuous batching, jitted decode step with donated cache
-state, per-request latency accounting.
+Demonstrates the production serving path behind the PR-8 API: a
+``ServeConfig`` + ``EngineHooks.for_model`` pair drives either the paged
+block-pool scheduler (chunked prefill, prefix sharing, COW) or the legacy
+contiguous per-slot cache, with per-request latency accounting.
 """
 from __future__ import annotations
 
@@ -13,14 +14,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.train import _reduce
 from repro.models import lm
-from repro.serving import (BatchScheduler, Request, decode_step,
-                           init_decode_state, prefill)
+from repro.serving import (BatchScheduler, EngineHooks, Request, ServeConfig,
+                           paged_supported)
 
 
 def main(argv=None):
@@ -32,34 +32,39 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "paged", "contiguous"],
+                    help="auto: paged for the GQA-KV families, contiguous "
+                         "otherwise (MLA/SWA/SSM/hybrid/encdec)")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill token budget per tick (paged mode; "
+                         "default: block size)")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=["bfloat16", "float32", "int8"],
+                    help="KV storage dtype (default: the compute dtype)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop at this token id (default: run to max-new)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = _reduce(cfg)
     params = lm.init_params(jax.random.key(0), cfg)
-    print(f"[serve] {cfg.name} ({cfg.family}) slots={args.slots}", flush=True)
 
-    cache_dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
-
-    def prefill_one(tokens):
-        return prefill(params, cfg, {"tokens": jnp.asarray(tokens)},
-                       args.max_len, cache_dtype)
-
-    decode_fn = jax.jit(
-        lambda state, toks: decode_step(params, cfg, state, toks),
-        donate_argnums=(0,))
-
-    def merge_fn(state, slot_state, i):
-        def wr(dst, src):
-            return dst.at[:, i].set(src[:, 0])
-        return {"caches": jax.tree.map(wr, state["caches"],
-                                       slot_state["caches"]),
-                "pos": slot_state["pos"]}
-
-    init_state = init_decode_state(cfg, args.slots, args.max_len, cache_dtype)
-    sched = BatchScheduler(args.slots, prefill_one, decode_fn, merge_fn,
-                           init_state)
+    mode = args.mode
+    if mode == "auto":
+        mode = "paged" if paged_supported(cfg) else "contiguous"
+    cache_dtype = args.cache_dtype or (
+        "bfloat16" if cfg.compute_dtype == "bfloat16" else "float32")
+    serve = ServeConfig(num_slots=args.slots, eos_id=args.eos_id,
+                        max_len=args.max_len, mode=mode,
+                        block_size=args.block_size,
+                        prefill_chunk=args.prefill_chunk,
+                        cache_dtype=cache_dtype)
+    print(f"[serve] {cfg.name} ({cfg.family}) slots={args.slots} "
+          f"mode={mode} cache={cache_dtype}", flush=True)
+    sched = BatchScheduler(serve, EngineHooks.for_model(params, cfg, serve))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -72,9 +77,13 @@ def main(argv=None):
     finished = sched.run_until_drained()
     dt = time.time() - t0
     tok = sum(len(r.generated) for r in finished)
+    extra = ""
+    if mode == "paged":
+        extra = (f", {sched.stats['prefix_hits']} prefix hits, "
+                 f"{sched.stats['cow_copies']} COW copies")
     print(f"[serve] {len(finished)}/{args.requests} requests, {tok} tokens "
-          f"in {dt:.1f}s ({tok/dt:.1f} tok/s, {sched.steps_run} decode steps)",
-          flush=True)
+          f"in {dt:.1f}s ({tok/dt:.1f} tok/s, {sched.steps_run} decode steps"
+          f"{extra})", flush=True)
     for r in finished[:3]:
         print(f"  req {r.uid}: {r.generated[:8]}...", flush=True)
     return finished

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, restore_checkpoint, latest_step
 from repro.configs import ARCH_NAMES, get_config
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import (apply_resume_extra, capture_resume_extra,
                               default_bits, init_train_state)
 from repro.data import SyntheticLMDataset, StragglerTolerantLoader
@@ -238,11 +238,13 @@ def main(argv=None):
 
     step_fn = jax.jit(
         make_train_step(
-            cfg, policy, ocfg, engine=args.engine,
-            pipeline_schedule=pipe_sched,
-            pipeline_stages=(pipe_axis_size(mesh) * pipe_sched.num_virtual
-                             if pipe_sched else None),
-            num_microbatches=args.microbatches if pipe_sched else None),
+            cfg, policy, ocfg,
+            StepOptions(
+                engine=args.engine,
+                pipeline_schedule=pipe_sched,
+                pipeline_stages=(pipe_axis_size(mesh) * pipe_sched.num_virtual
+                                 if pipe_sched else None),
+                num_microbatches=args.microbatches if pipe_sched else None)),
         donate_argnums=(0, 1))
 
     def ckpt_extra(next_step):

@@ -3,8 +3,20 @@ from repro.serving.engine import (
     decode_step,
     prefill,
     greedy_generate,
+    init_paged_state,
+    paged_decode_step,
+    paged_prefill_chunk,
+    paged_supported,
 )
-from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.paging import BlockPool, PoolExhausted, PrefixIndex
+from repro.serving.scheduler import (
+    BatchScheduler,
+    EngineHooks,
+    Request,
+    ServeConfig,
+)
 
 __all__ = ["init_decode_state", "decode_step", "prefill", "greedy_generate",
-           "BatchScheduler", "Request"]
+           "init_paged_state", "paged_decode_step", "paged_prefill_chunk",
+           "paged_supported", "BlockPool", "PoolExhausted", "PrefixIndex",
+           "BatchScheduler", "EngineHooks", "Request", "ServeConfig"]

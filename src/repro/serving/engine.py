@@ -207,6 +207,218 @@ def _prefill_impl(params, cfg: ModelConfig, batch: dict, max_len: int,
     return logits, {"caches": caches, "pos": jnp.asarray(t, jnp.int32)}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV: block-pool state + decode/prefill against per-request block tables
+# ---------------------------------------------------------------------------
+#
+# The pool stores every layer's K/V in fixed-size blocks on a leading block
+# axis: [L, N_blocks, block, kv_heads, head_dim].  A request owns an ordered
+# block table (host-side, see serving/paging.py); token at absolute position
+# p lives in table[p // block] at offset p % block.  Block 0 is the reserved
+# null block: masked-out slots write there and nothing ever reads it
+# unmasked.  ``cache_dtype=jnp.int8`` switches the payload to int8 with a
+# PER-TOKEN absmax scale ([L, N, block] f32) — per-token scaling makes the
+# stored bytes independent of chunking, which is what lets prefix sharing
+# reuse blocks bitwise across requests.
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged decode covers the GQA-KV attention families; MLA latents, SWA
+    rings, SSM state and cross-attention keep the contiguous path."""
+    return (cfg.family in PAGED_FAMILIES and not cfg.use_mla
+            and cfg.swa_window is None)
+
+
+def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     cache_dtype=jnp.bfloat16) -> dict:
+    if not paged_supported(cfg):
+        raise ValueError(f"paged KV unsupported for {cfg.family} "
+                         f"(mla={cfg.use_mla}, swa={cfg.swa_window})")
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    if jnp.dtype(cache_dtype) == jnp.int8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, cache_dtype),
+            "v": jnp.zeros(shape, cache_dtype)}
+
+
+def constrain_pool(pool: dict) -> dict:
+    """Shard the pool over the ambient mesh: blocks over the data axes, KV
+    heads over "model" (see dist.api.make_default_rules); no-op unmeshed."""
+    return {k: constrain(x, "lnshd" if x.ndim == 5 else "lns")
+            for k, x in pool.items()}
+
+
+def _quant_rows(x: Array):
+    """Per-token int8 absmax: x [R, H, D] -> (int8 [R, H, D], scale [R])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 2))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _pool_update(pool_l: dict, k: Array, v: Array, tables: Array,
+                 qpos: Array) -> dict:
+    """Write [B, C] new tokens' K/V into one layer's blocks.
+
+    Distinct (slot, position) pairs hit distinct rows — except masked slots,
+    whose tables are all-null: their rows collide on block 0, which is fine
+    because the null block is never read unmasked.
+    """
+    bs = pool_l["k"].shape[1]
+    bids = jnp.take_along_axis(tables, qpos // bs, axis=1).reshape(-1)
+    offs = (qpos % bs).reshape(-1)
+    kr = k.reshape((-1,) + k.shape[2:])
+    vr = v.reshape((-1,) + v.shape[2:])
+    out = dict(pool_l)
+    if "k_scale" in pool_l:
+        qk, sk = _quant_rows(kr)
+        qv, sv = _quant_rows(vr)
+        out["k"] = pool_l["k"].at[bids, offs].set(qk)
+        out["v"] = pool_l["v"].at[bids, offs].set(qv)
+        out["k_scale"] = pool_l["k_scale"].at[bids, offs].set(sk)
+        out["v_scale"] = pool_l["v_scale"].at[bids, offs].set(sv)
+    else:
+        out["k"] = pool_l["k"].at[bids, offs].set(kr.astype(pool_l["k"].dtype))
+        out["v"] = pool_l["v"].at[bids, offs].set(vr.astype(pool_l["v"].dtype))
+    return out
+
+
+def _pool_gather(pool_l: dict, tables: Array, dt) -> tuple[Array, Array]:
+    """Gather each slot's blocks in table order -> [B, M*block, Hkv, hd]."""
+    kk = pool_l["k"][tables]
+    vv = pool_l["v"][tables]
+    b, m, bs, h, d = kk.shape
+    kk = kk.reshape(b, m * bs, h, d)
+    vv = vv.reshape(b, m * bs, h, d)
+    if "k_scale" in pool_l:
+        ks = pool_l["k_scale"][tables].reshape(b, m * bs)
+        vs = pool_l["v_scale"][tables].reshape(b, m * bs)
+        kk = kk.astype(dt) * ks[..., None, None].astype(dt)
+        vv = vv.astype(dt) * vs[..., None, None].astype(dt)
+    else:
+        kk = kk.astype(dt)
+        vv = vv.astype(dt)
+    return kk, vv
+
+
+def _paged_attention(params, h: Array, cfg: ModelConfig, pool_l: dict,
+                     tables: Array, qpos: Array, attn_impl):
+    """Attention over paged KV.  h: [B, C, D]; qpos: [B, C] absolute
+    positions.  Writes the C new tokens' K/V, then attends over each slot's
+    gathered blocks with kpos <= qpos masking — op-for-op the same math as
+    ``layers.attention_decode``, so paged == contiguous bitwise (tested).
+    """
+    dt = h.dtype
+    q, k, v = L._project_qkv(params, h, cfg, qpos)
+    pool_l = _pool_update(pool_l, k, v, tables, qpos)
+    groups = q.shape[2] // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+    if attn_impl == "kernel" and q.shape[1] == 1:
+        from repro.kernels import paged_attention as PA
+        out = PA.paged_attention(q[:, 0], pool_l, tables, qpos[:, 0],
+                                 groups=groups, scale=scale)[:, None]
+    else:
+        kk, vv = _pool_gather(pool_l, tables, dt)
+        kk = L._expand_kv(kk, groups)
+        vv = L._expand_kv(vv, groups)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = jnp.arange(kk.shape[1])
+        ok = kpos[None, None, :] <= qpos[:, :, None]  # [B, C, T]
+        s = s + jnp.where(ok, 0.0, L.NEG_INF)[:, None]
+        p = jax.nn.softmax(s, axis=-1).astype(dt)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    y = jnp.einsum("bthk,hkd->btd", out, L._masked_wo(params, cfg, dt))
+    return y, pool_l
+
+
+def _paged_block(p, x: Array, cfg: ModelConfig, pool_l: dict, tables: Array,
+                 qpos: Array, attn_impl):
+    h = L.apply_norm(p["attn_norm"], x, cfg)
+    attn_out, pool_l = _paged_attention(p["attn"], h, cfg, pool_l, tables,
+                                        qpos, attn_impl)
+    x = x + attn_out
+    h = L.apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.family == "moe":
+        mlp_out, _ = L.moe(p["moe"], h, cfg)
+    else:
+        mlp_out = L.mlp(p["mlp"], h, cfg)
+    return x + mlp_out, pool_l
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: Array, dt) -> Array:
+    x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x
+
+
+def paged_decode_step(params, cfg: ModelConfig, pool: dict, tables: Array,
+                      seq_lens: Array, tokens: Array, attn_impl=None):
+    """One decode step over the slot batch against the paged pool.
+
+    tokens: [B, 1] int32; tables: [B, M] int32 block tables (null rows for
+    empty slots); seq_lens: [B] int32 — tokens already cached per slot,
+    i.e. the incoming token's write position.  attn_impl: None/"ref" = the
+    jnp gather path, "kernel" = the fused Pallas paged-attention kernel.
+    Returns (logits [B, V] f32, pool).
+    """
+    if not paged_supported(cfg):
+        raise ValueError(f"paged decode unsupported for {cfg.family}")
+    dt = lm.compute_dtype(cfg)
+    pool = constrain_pool(pool)
+    x = _embed_tokens(params, cfg, tokens, dt)
+    qpos = seq_lens.astype(jnp.int32)[:, None]
+
+    def body(h, xs):
+        p, pl_ = xs
+        h2, pl2 = _paged_block(p, h, cfg, pl_, tables, qpos, attn_impl)
+        return h2, pl2
+    x, new_pool = xscan(body, x, (params["blocks"], pool))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    w = lm.head_weight(params, cfg)
+    logits = constrain(
+        (x[:, 0, :] @ w.astype(x.dtype)).astype(jnp.float32), "bv")
+    return logits, constrain_pool(new_pool)
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, pool: dict, table: Array,
+                        tokens: Array, start) -> tuple[Array, dict]:
+    """Prefill ``tokens`` [1, C] at absolute positions start..start+C-1.
+
+    Each chunk attends over the pool contents written so far (earlier
+    chunks / reused prefix blocks) plus its own causally-masked K/V — so a
+    prompt prefills in per-tick budgets without a contiguous cache.
+    Returns (last-token logits [1, V], pool).
+    """
+    if not paged_supported(cfg):
+        raise ValueError(f"paged prefill unsupported for {cfg.family}")
+    dt = lm.compute_dtype(cfg)
+    pool = constrain_pool(pool)
+    c = tokens.shape[1]
+    qpos = (jnp.asarray(start, jnp.int32)
+            + jnp.arange(c, dtype=jnp.int32))[None, :]
+    x = _embed_tokens(params, cfg, tokens, dt)
+
+    def body(h, xs):
+        p, pl_ = xs
+        h2, pl2 = _paged_block(p, h, cfg, pl_, table, qpos, "ref")
+        return h2, pl2
+    x, new_pool = xscan(body, x, (params["blocks"], pool))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    w = lm.head_weight(params, cfg)
+    logits = constrain(
+        (x[:, -1, :] @ w.astype(x.dtype)).astype(jnp.float32), "bv")
+    return logits, constrain_pool(new_pool)
+
+
 def greedy_generate(params, cfg: ModelConfig, batch: dict, max_len: int,
                     num_steps: int, cache_dtype=jnp.bfloat16,
                     kernel_backend: Optional[str] = None):

@@ -1,31 +1,48 @@
-"""Slot-based continuous batching for the decode loop.
+"""Continuous batching over a fixed slot batch — contiguous or paged KV.
 
-A fixed-size batch of decode slots runs every step; finished or empty slots
-are refilled from a FIFO of pending requests (prefill writes the new
-request's cache into the slot).  This is the standard continuous-batching
-scheme adapted to JAX's static shapes: the batch dimension is fixed, slot
-occupancy is a host-side mask, and per-slot positions live in the cache
-state.
+The scheduler is host-side control logic around jitted device steps.  Two
+cache regimes share one driver:
 
-The scheduler is host-side control logic and is CHECKPOINTABLE as a tested
-fact (tests/test_serving.py::test_scheduler_snapshot_resumes_identically):
-``snapshot()`` captures the queue state (pending FIFO, slot occupancy, next
-tokens, per-request progress) together with the device-side cache state as
-host arrays, and ``BatchScheduler.restore`` rebuilds a scheduler that
-continues the stream with IDENTICAL outputs — mid-decode preemption costs
-nothing but the snapshot.  The snapshot is a pytree of arrays/ints, so it
-round-trips through ``repro.ckpt.save_checkpoint`` unchanged.  The
-device-side steps stay pure and jitted.
+  * ``mode="contiguous"`` — the original scheme: whole-prompt prefill into
+    a per-slot contiguous cache, then batched decode.  This is the legacy
+    behavior, bit-for-bit, including the snapshot format.
+  * ``mode="paged"`` — the PR-8 scale-out path: a block pool
+    (``serving.paging``) replaces per-slot caches.  Prompts prefill in
+    per-tick token budgets (*chunked prefill*) interleaved with decode, so
+    a long admission never stalls running streams; admission is FIFO or
+    priority against free-block accounting; shared prompt prefixes reuse
+    blocks copy-on-write via the prefix index.
+
+API (PR 8): construct with ``BatchScheduler(ServeConfig(...), EngineHooks
+(...))``.  The legacy positional ``BatchScheduler(num_slots, prefill_fn,
+decode_fn, merge_fn, init_state, eos_id=...)`` still works through an
+adapter that emits a DeprecationWarning — as does the ``eos_id=-1``
+"never matches" sentinel, which ``ServeConfig`` replaces with an explicit
+``eos_id=None``.
+
+The scheduler stays CHECKPOINTABLE as a tested fact
+(tests/test_serving.py, tests/test_paging.py): ``snapshot()`` captures
+queue state + device cache as host arrays — in paged mode that extends to
+the pool tensor, the free-list/refcounts, per-slot block tables and the
+prefix index — and ``BatchScheduler.restore`` continues the stream with
+IDENTICAL outputs, even mid-chunked-prefill.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from functools import partial
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.paging import (BlockPool, PoolExhausted, PrefixIndex,
+                                  blocks_for)
+
+_CACHE_DTYPES = ("bfloat16", "float32", "int8")
 
 
 @dataclasses.dataclass
@@ -35,51 +52,252 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    priority: int = 0           # higher admits first under admission="priority"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine-facing serving configuration (replaces the loose kwargs of
+    the legacy ctor).  ``eos_id`` is REQUIRED: pass the tokenizer's real id,
+    or ``None`` to run every request to its max_new_tokens — the old ``-1``
+    sentinel (an id no tokenizer emits) is accepted with a
+    DeprecationWarning and mapped to ``None``."""
+    num_slots: int
+    eos_id: Optional[int]
+    max_len: int = 64
+    mode: str = "paged"                  # "paged" | "contiguous"
+    block_size: int = 8
+    num_blocks: Optional[int] = None     # None: 1 null + slots*max_blocks
+    prefill_chunk: Optional[int] = None  # tokens/tick budget; None: block_size
+    cache_dtype: str = "bfloat16"
+    prefix_sharing: bool = True
+    admission: str = "fifo"              # "fifo" | "priority"
+    attn_impl: Optional[str] = None      # None/"ref" | "kernel" (paged decode)
+
+    def __post_init__(self):
+        if self.eos_id == -1:
+            warnings.warn(
+                "eos_id=-1 was the legacy 'never matches' sentinel; pass "
+                "eos_id=None explicitly", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "eos_id", None)
+        if self.mode not in ("paged", "contiguous"):
+            raise ValueError(f"mode must be 'paged' or 'contiguous', "
+                             f"got {self.mode!r}")
+        if self.admission not in ("fifo", "priority"):
+            raise ValueError(f"admission must be 'fifo' or 'priority', "
+                             f"got {self.admission!r}")
+        if self.cache_dtype not in _CACHE_DTYPES:
+            raise ValueError(f"cache_dtype must be one of {_CACHE_DTYPES}, "
+                             f"got {self.cache_dtype!r}")
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.mode == "paged":
+            if self.block_size < 1:
+                raise ValueError("block_size must be >= 1")
+            if self.max_len % self.block_size:
+                raise ValueError(
+                    f"max_len ({self.max_len}) must be a multiple of "
+                    f"block_size ({self.block_size})")
+            if self.prefill_chunk is not None and self.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return self.max_len // self.block_size
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        # +2 per slot: admission reserves COW-copy slack on top of each
+        # request's worst-case footprint (see BatchScheduler._admit)
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return 1 + self.num_slots * (self.max_blocks_per_seq + 2)
+
+    @property
+    def chunk_tokens(self) -> int:
+        return self.prefill_chunk or self.block_size
+
+    def jnp_cache_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "int8": jnp.int8}[self.cache_dtype]
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class EngineHooks:
+    """The device-step surface the scheduler drives (replaces the legacy
+    positional callable triple).
+
+    contiguous mode:
+      prefill(tokens [1,T]) -> (logits [1,V], slot_state)
+      decode(state, tokens [B,1]) -> (logits [B,V], state)
+      merge(state, slot_state, i) -> state
+      init_state: batched decode state
+    paged mode:
+      decode(pool, tables [B,M], lens [B], tokens [B,1]) -> (logits, pool)
+      prefill_chunk(pool, table [1,M], tokens [1,C], start) -> (logits, pool)
+      copy_block(pool, src, dst) -> pool      (COW block copy on device)
+      init_state: the block pool pytree
+    """
+    prefill: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    merge: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
+    copy_block: Optional[Callable] = None
+    init_state: Any = None
+
+    @classmethod
+    def for_model(cls, params, cfg, serve: ServeConfig) -> "EngineHooks":
+        """Build jitted closures over (params, cfg) for either mode."""
+        from repro.serving import engine as E
+        dtype = serve.jnp_cache_dtype()
+        if serve.mode == "paged":
+            pool = E.init_paged_state(cfg, serve.resolved_num_blocks,
+                                      serve.block_size, dtype)
+            decode = jax.jit(
+                lambda pool, tables, lens, toks: E.paged_decode_step(
+                    params, cfg, pool, tables, lens, toks, serve.attn_impl),
+                donate_argnums=(0,))
+            chunk = jax.jit(
+                lambda pool, table, toks, start: E.paged_prefill_chunk(
+                    params, cfg, pool, table, toks, start),
+                donate_argnums=(0,))
+            copy = jax.jit(
+                lambda pool, src, dst: {
+                    k: x.at[:, dst].set(x[:, src]) for k, x in pool.items()},
+                donate_argnums=(0,))
+            return cls(decode=decode, prefill_chunk=chunk, copy_block=copy,
+                       init_state=pool)
+        state = E.init_decode_state(cfg, serve.num_slots, serve.max_len,
+                                    dtype)
+
+        prefill_one = jax.jit(
+            lambda tokens: E.prefill(params, cfg,
+                                     {"tokens": jnp.asarray(tokens)},
+                                     serve.max_len, dtype))
+
+        decode = jax.jit(
+            lambda state, toks: E.decode_step(params, cfg, state, toks),
+            donate_argnums=(0,))
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def merge(state, slot_state, i):
+            def wr(dst, src):
+                return dst.at[:, i].set(src[:, 0])
+            return {"caches": jax.tree.map(wr, state["caches"],
+                                           slot_state["caches"]),
+                    "pos": slot_state["pos"]}
+
+        return cls(prefill=prefill_one, decode=decode, merge=merge,
+                   init_state=state)
+
+
+_LEGACY_CTOR_MSG = (
+    "BatchScheduler(num_slots, prefill_fn, decode_fn, merge_fn, init_state) "
+    "is deprecated; use BatchScheduler(ServeConfig(...), EngineHooks(...))")
 
 
 class BatchScheduler:
-    """Drives (prefill_fn, decode_fn) over a fixed slot batch.
+    """Drives ``EngineHooks`` over a fixed slot batch (see module docstring
+    for the contiguous/paged split and the legacy-ctor adapter)."""
 
-    prefill_fn(tokens [1,T]) -> (logits [1,V], slot_state)
-    decode_fn(state, tokens [B,1]) -> (logits [B,V], state)
-    merge_fn(state, slot_state, slot_idx) -> state   (writes one slot's cache)
-    """
+    def __init__(self, config, hooks=None, decode_fn=None, merge_fn=None,
+                 init_state=None, eos_id=-1):
+        if isinstance(config, ServeConfig):
+            if not isinstance(hooks, EngineHooks):
+                raise TypeError("new-style BatchScheduler takes "
+                                "(ServeConfig, EngineHooks)")
+        else:
+            # legacy positional ctor: (num_slots, prefill, decode, merge,
+            # init_state, eos_id=-1)
+            warnings.warn(_LEGACY_CTOR_MSG, DeprecationWarning, stacklevel=2)
+            num_slots = int(config)
+            if eos_id == -1:
+                warnings.warn(
+                    "eos_id=-1 was the legacy 'never matches' sentinel; "
+                    "pass an explicit eos_id (or None)",
+                    DeprecationWarning, stacklevel=2)
+                eos = None
+            else:
+                eos = eos_id
+            config = ServeConfig(num_slots=num_slots, eos_id=eos,
+                                 mode="contiguous")
+            hooks = EngineHooks(prefill=hooks, decode=decode_fn,
+                                merge=merge_fn, init_state=init_state)
+        self._setup(config, hooks)
 
-    def __init__(self, num_slots: int, prefill_fn: Callable,
-                 decode_fn: Callable, merge_fn: Callable, init_state,
-                 eos_id: int = -1):
-        self.num_slots = num_slots
-        self.prefill_fn = prefill_fn
-        self.decode_fn = decode_fn
-        self.merge_fn = merge_fn
-        self.state = init_state
-        self.eos_id = eos_id
+    def _setup(self, config: ServeConfig, hooks: EngineHooks):
+        self.config = config
+        self.hooks = hooks
+        self.num_slots = config.num_slots
+        self.eos_id = config.eos_id
         self.pending: Deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * num_slots
-        self.next_tokens = np.zeros((num_slots, 1), np.int32)
+        self.slots: List[Optional[Request]] = [None] * self.num_slots
+        self.next_tokens = np.zeros((self.num_slots, 1), np.int32)
         self.steps_run = 0
+        self.tick_log: List[dict] = []
+        self.stats = {"prefix_hits": 0, "reused_tokens": 0, "cow_copies": 0,
+                      "prefill_tokens": 0}
+        if config.mode == "paged":
+            if hooks.decode is None or hooks.prefill_chunk is None \
+                    or hooks.copy_block is None:
+                raise ValueError("paged mode needs decode, prefill_chunk and "
+                                 "copy_block hooks")
+            self.pool = hooks.init_state
+            self.block_pool = BlockPool(config.resolved_num_blocks)
+            self.prefix: Optional[PrefixIndex] = (
+                PrefixIndex() if config.prefix_sharing else None)
+            self._tables: List[List[int]] = [[] for _ in range(self.num_slots)]
+            self._pos = np.zeros(self.num_slots, np.int64)
+            self._prefilling = np.zeros(self.num_slots, bool)
+        else:
+            self.state = hooks.init_state
+
+    # legacy attribute aliases (the old ctor stored the callables directly)
+    @property
+    def prefill_fn(self):
+        return self.hooks.prefill
+
+    @property
+    def decode_fn(self):
+        return self.hooks.decode
+
+    @property
+    def merge_fn(self):
+        return self.hooks.merge
 
     def submit(self, req: Request):
+        if self.config.mode == "paged":
+            total = len(req.prompt) + req.max_new_tokens
+            if total > self.config.max_len:
+                raise ValueError(
+                    f"request {req.uid}: prompt+max_new ({total}) exceeds "
+                    f"max_len ({self.config.max_len})")
         self.pending.append(req)
+
+    # ------------------------------------------------------------------
+    # contiguous mode (legacy behavior, unchanged)
+    # ------------------------------------------------------------------
 
     def _fill_slots(self):
         for i in range(self.num_slots):
             if self.slots[i] is None and self.pending:
                 req = self.pending.popleft()
-                logits, slot_state = self.prefill_fn(req.prompt[None, :])
-                self.state = self.merge_fn(self.state, slot_state, i)
+                logits, slot_state = self.hooks.prefill(req.prompt[None, :])
+                self.state = self.hooks.merge(self.state, slot_state, i)
                 tok = int(np.argmax(np.asarray(logits)[0]))
                 req.generated.append(tok)
                 self.next_tokens[i, 0] = tok
                 self.slots[i] = req
 
-    def step(self) -> int:
-        """One decode step over the batch. Returns #active slots."""
+    def _step_contiguous(self) -> int:
         self._fill_slots()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
-        logits, self.state = self.decode_fn(
+        logits, self.state = self.hooks.decode(
             self.state, jnp.asarray(self.next_tokens))
         toks = np.argmax(np.asarray(logits), axis=-1)
         for i in active:
@@ -87,28 +305,233 @@ class BatchScheduler:
             tok = int(toks[i])
             req.generated.append(tok)
             self.next_tokens[i, 0] = tok
-            if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.slots[i] = None
         self.steps_run += 1
         return len(active)
 
+    # ------------------------------------------------------------------
+    # paged mode
+    # ------------------------------------------------------------------
+
+    def _ensure_block(self, slot: int, bi: int):
+        """Make the slot's table cover block index ``bi`` with an
+        exclusively-owned block: append a fresh one past the end, or
+        copy-on-write a shared one (refcount > 1 means a prefix-index entry
+        or another request also reads it)."""
+        table = self._tables[slot]
+        if bi == len(table):
+            table.append(self.block_pool.alloc())
+        elif self.block_pool.refs[table[bi]] > 1:
+            src = table[bi]
+            dst = self.block_pool.alloc()
+            self.pool = self.hooks.copy_block(
+                self.pool, np.int32(src), np.int32(dst))
+            self.block_pool.release(src)
+            table[bi] = dst
+            self.stats["cow_copies"] += 1
+
+    def _committed_blocks(self) -> int:
+        """Blocks running requests will still allocate: the rest of each
+        request's footprint (tables grow lazily during prefill/decode) plus
+        one COW-copy slack each."""
+        bs = self.config.block_size
+        tot = 0
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            footprint = blocks_for(len(r.prompt) + r.max_new_tokens, bs)
+            tot += max(0, footprint - len(self._tables[i])) + 1
+        return tot
+
+    def _admit(self):
+        bs = self.config.block_size
+        while self.pending:
+            slot = next((i for i, r in enumerate(self.slots) if r is None),
+                        None)
+            if slot is None:
+                break
+            if self.config.admission == "priority":
+                req = max(self.pending, key=lambda r: r.priority)
+            else:
+                req = self.pending[0]
+            p = len(req.prompt)
+            reuse_n, reuse_blocks = 0, ()
+            if self.prefix is not None:
+                reuse_n, reuse_blocks = self.prefix.lookup(req.prompt, p - 1)
+            # +2 slack: the partial boundary block and the request's own
+            # final block can each need one COW copy beyond the count
+            need = (blocks_for(p + req.max_new_tokens, bs)
+                    - len(reuse_blocks) + 2)
+            if self.block_pool.available() - self._committed_blocks() < need:
+                break  # head-of-line: wait for running requests to free
+            self.pending.remove(req)
+            for b in reuse_blocks:
+                self.block_pool.retain(b)
+            self.slots[slot] = req
+            self._tables[slot] = list(reuse_blocks)
+            self._pos[slot] = reuse_n
+            self._prefilling[slot] = True
+            self.next_tokens[slot, 0] = 0
+            if reuse_n:
+                self.stats["prefix_hits"] += 1
+                self.stats["reused_tokens"] += reuse_n
+
+    def _finish(self, i: int):
+        req = self.slots[i]
+        req.done = True
+        for bid in self._tables[i]:
+            self.block_pool.release(bid)
+        self._tables[i] = []
+        self._pos[i] = 0
+        self._prefilling[i] = False
+        self.next_tokens[i, 0] = 0
+        self.slots[i] = None
+
+    def _table_row(self, i: int) -> np.ndarray:
+        row = np.zeros((1, self.config.max_blocks_per_seq), np.int32)
+        t = self._tables[i]
+        row[0, :len(t)] = t
+        return row
+
+    def _prefill_tick(self) -> int:
+        """Spend up to ``chunk_tokens`` of prefill budget across prefilling
+        slots; requests whose prompt completes sample their first token."""
+        budget = self.config.chunk_tokens
+        bs = self.config.block_size
+        total = 0
+        for i in range(self.num_slots):
+            if budget <= 0:
+                break
+            req = self.slots[i]
+            if req is None or not self._prefilling[i]:
+                continue
+            pos = int(self._pos[i])
+            p = len(req.prompt)
+            c = min(budget, p - pos)
+            for bi in range(pos // bs, (pos + c - 1) // bs + 1):
+                self._ensure_block(i, bi)
+            toks = jnp.asarray(
+                np.asarray(req.prompt[pos:pos + c], np.int32))[None, :]
+            logits, self.pool = self.hooks.prefill_chunk(
+                self.pool, jnp.asarray(self._table_row(i)), toks,
+                np.int32(pos))
+            pos += c
+            self._pos[i] = pos
+            budget -= c
+            total += c
+            if pos == p:
+                self._prefilling[i] = False
+                if self.prefix is not None:
+                    self.prefix.register(np.asarray(req.prompt, np.int32),
+                                         self._tables[i], bs, self.block_pool)
+                tok = int(np.argmax(np.asarray(logits)[0]))
+                req.generated.append(tok)
+                self.next_tokens[i, 0] = tok
+                if (self.eos_id is not None and tok == self.eos_id) \
+                        or len(req.generated) >= req.max_new_tokens:
+                    self._finish(i)
+        self.stats["prefill_tokens"] += total
+        return total
+
+    def _decode_tick(self) -> int:
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and not self._prefilling[i]]
+        if not active:
+            return 0
+        bs = self.config.block_size
+        for i in active:
+            # the incoming token writes at position _pos[i]
+            self._ensure_block(i, int(self._pos[i]) // bs)
+        m = self.config.max_blocks_per_seq
+        tables = np.zeros((self.num_slots, m), np.int32)
+        lens = np.zeros(self.num_slots, np.int32)
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        for i in active:
+            t = self._tables[i]
+            tables[i, :len(t)] = t
+            lens[i] = self._pos[i]
+            toks[i, 0] = self.next_tokens[i, 0]
+        # inactive rows stay all-null (block 0) / len 0 / token 0: their
+        # writes land in the null block, which is never read unmasked
+        logits, self.pool = self.hooks.decode(
+            self.pool, jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(toks))
+        out = np.argmax(np.asarray(logits), axis=-1)
+        for i in active:
+            req = self.slots[i]
+            tok = int(out[i])
+            req.generated.append(tok)
+            self._pos[i] += 1
+            self.next_tokens[i, 0] = tok
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or len(req.generated) >= req.max_new_tokens:
+                self._finish(i)
+        self.steps_run += 1
+        return len(active)
+
+    def _step_paged(self) -> int:
+        self._admit()
+        pre = self._prefill_tick()
+        n = self._decode_tick()
+        prefilling = int(np.sum(self._prefilling))
+        self.tick_log.append({"decoded": n, "prefill_tokens": pre,
+                              "prefilling": prefilling})
+        if n == 0 and pre == 0 and self.pending \
+                and all(r is None for r in self.slots):
+            raise PoolExhausted(
+                "admission deadlock: pending requests cannot fit the block "
+                "pool and no running request can free blocks — size "
+                "num_blocks for num_slots * max_len, or drop the prefix "
+                "index (release_prefix_cache())")
+        return n + prefilling
+
+    def release_prefix_cache(self):
+        """Drop every prefix-index entry, releasing its block references;
+        blocks unreferenced by live requests return to the free list."""
+        if self.config.mode == "paged" and self.prefix is not None:
+            self.prefix.drop(self.block_pool)
+
+    def step(self) -> int:
+        """One scheduler tick.  Returns the number of slots that made
+        progress (decoded or still prefilling) — 0 means idle."""
+        if self.config.mode == "paged":
+            return self._step_paged()
+        return self._step_contiguous()
+
     # -- checkpointability: the docstring claim, made mechanical ----------
+
+    @staticmethod
+    def _pack(r: Request) -> dict:
+        return {"uid": int(r.uid),
+                "prompt": np.asarray(r.prompt, np.int32).copy(),
+                "max_new_tokens": int(r.max_new_tokens),
+                "generated": np.asarray(r.generated, np.int32),
+                "done": bool(r.done),
+                "priority": int(r.priority)}
+
+    @staticmethod
+    def _unpack(d: dict) -> Request:
+        return Request(uid=int(d["uid"]),
+                       prompt=np.asarray(d["prompt"], np.int32),
+                       max_new_tokens=int(d["max_new_tokens"]),
+                       generated=[int(t) for t in
+                                  np.asarray(d["generated"]).ravel()],
+                       done=bool(d["done"]),
+                       priority=int(d.get("priority", 0)))
 
     def snapshot(self) -> dict:
         """Host-side copy of the full scheduler state (a pytree of numpy
         arrays, ints and bools — msgpack/np.save-friendly, so it rides
-        ``repro.ckpt.save_checkpoint`` as-is)."""
-        def pack(r: Request) -> dict:
-            return {"uid": int(r.uid),
-                    "prompt": np.asarray(r.prompt, np.int32).copy(),
-                    "max_new_tokens": int(r.max_new_tokens),
-                    "generated": np.asarray(r.generated, np.int32),
-                    "done": bool(r.done)}
-
-        return {
+        ``repro.ckpt.save_checkpoint`` as-is).  Paged mode extends the
+        legacy format with the pool tensor, block accounting, per-slot
+        tables and the prefix index."""
+        eos_enc = -1 if self.eos_id is None else int(self.eos_id)
+        base = {
             "num_slots": int(self.num_slots),
-            "eos_id": int(self.eos_id),
+            "eos_id": eos_enc,
             "steps_run": int(self.steps_run),
             "next_tokens": np.asarray(self.next_tokens).copy(),
             # slot occupancy: pack occupied slots with their index so the
@@ -116,35 +539,87 @@ class BatchScheduler:
             "slot_idx": np.asarray(
                 [i for i, r in enumerate(self.slots) if r is not None],
                 np.int32),
-            "slot_reqs": [pack(r) for r in self.slots if r is not None],
-            "pending": [pack(r) for r in self.pending],
-            "state": jax.tree.map(np.asarray, self.state),
+            "slot_reqs": [self._pack(r) for r in self.slots if r is not None],
+            "pending": [self._pack(r) for r in self.pending],
         }
+        if self.config.mode == "contiguous":
+            base["state"] = jax.tree.map(np.asarray, self.state)
+            return base
+        c = self.config
+        for req, i in zip(base["slot_reqs"], base["slot_idx"]):
+            req["table"] = np.asarray(self._tables[int(i)], np.int32)
+            req["pos"] = int(self._pos[int(i)])
+            req["prefilling"] = bool(self._prefilling[int(i)])
+        base["serve"] = {
+            "max_len": int(c.max_len),
+            "block_size": int(c.block_size),
+            "num_blocks": int(c.resolved_num_blocks),
+            "prefill_chunk": int(c.chunk_tokens),
+            "prefix_sharing": int(c.prefix_sharing),
+            "admission_priority": int(c.admission == "priority"),
+        }
+        base["pool"] = jax.tree.map(np.asarray, self.pool)
+        base["block_pool"] = self.block_pool.snapshot()
+        base["prefix"] = (self.prefix.snapshot() if self.prefix is not None
+                          else {"tokens": [], "blocks": []})
+        return base
 
     @classmethod
-    def restore(cls, snap: dict, prefill_fn: Callable, decode_fn: Callable,
-                merge_fn: Callable) -> "BatchScheduler":
+    def restore(cls, snap: dict, prefill_fn: Optional[Callable] = None,
+                decode_fn: Optional[Callable] = None,
+                merge_fn: Optional[Callable] = None, *,
+                hooks: Optional[EngineHooks] = None) -> "BatchScheduler":
         """Rebuild a scheduler from ``snapshot()`` output; the continued
-        decode stream is identical to the uninterrupted one (the functions
-        are stateless — only the snapshot carries state)."""
-        def unpack(d: dict) -> Request:
-            return Request(uid=int(d["uid"]),
-                           prompt=np.asarray(d["prompt"], np.int32),
-                           max_new_tokens=int(d["max_new_tokens"]),
-                           generated=[int(t) for t in
-                                      np.asarray(d["generated"]).ravel()],
-                           done=bool(d["done"]))
-
-        state = jax.tree.map(jnp.asarray, snap["state"])
-        sched = cls(int(snap["num_slots"]), prefill_fn, decode_fn, merge_fn,
-                    state, eos_id=int(snap["eos_id"]))
+        decode stream is identical to the uninterrupted one (the hooks are
+        stateless — only the snapshot carries state).  Contiguous snapshots
+        accept the legacy positional callables; paged snapshots need
+        ``hooks=`` (decode / prefill_chunk / copy_block)."""
+        eos = int(snap["eos_id"])
+        eos = None if eos == -1 else eos
+        if "pool" in snap:
+            if hooks is None:
+                raise ValueError("restoring a paged snapshot requires "
+                                 "hooks=EngineHooks(...)")
+            s = snap["serve"]
+            config = ServeConfig(
+                num_slots=int(snap["num_slots"]), eos_id=eos, mode="paged",
+                max_len=int(s["max_len"]), block_size=int(s["block_size"]),
+                num_blocks=int(s["num_blocks"]),
+                prefill_chunk=int(s["prefill_chunk"]),
+                cache_dtype=str(np.asarray(snap["pool"]["k"]).dtype),
+                prefix_sharing=bool(int(s["prefix_sharing"])),
+                admission=("priority" if int(s["admission_priority"])
+                           else "fifo"))
+            hooks = dataclasses.replace(
+                hooks, init_state=jax.tree.map(jnp.asarray, snap["pool"]))
+            sched = cls(config, hooks)
+            sched.block_pool = BlockPool.restore(snap["block_pool"])
+            if config.prefix_sharing:
+                sched.prefix = PrefixIndex.restore(snap["prefix"])
+            for i, rd in zip(np.asarray(snap["slot_idx"]).ravel(),
+                             snap["slot_reqs"]):
+                i = int(i)
+                sched.slots[i] = cls._unpack(rd)
+                sched._tables[i] = [int(b) for b in
+                                    np.asarray(rd["table"]).ravel()]
+                sched._pos[i] = int(rd["pos"])
+                sched._prefilling[i] = bool(rd["prefilling"])
+        else:
+            if hooks is None:
+                hooks = EngineHooks(prefill=prefill_fn, decode=decode_fn,
+                                    merge=merge_fn)
+            config = ServeConfig(num_slots=int(snap["num_slots"]),
+                                 eos_id=eos, mode="contiguous")
+            hooks = dataclasses.replace(
+                hooks, init_state=jax.tree.map(jnp.asarray, snap["state"]))
+            sched = cls(config, hooks)
+            for i, rd in zip(np.asarray(snap["slot_idx"]).ravel(),
+                             snap["slot_reqs"]):
+                sched.slots[int(i)] = cls._unpack(rd)
         sched.steps_run = int(snap["steps_run"])
         sched.next_tokens = np.asarray(snap["next_tokens"], np.int32).copy()
-        for i, req in zip(np.asarray(snap["slot_idx"]).ravel(),
-                          snap["slot_reqs"]):
-            sched.slots[int(i)] = unpack(req)
-        for req in snap["pending"]:
-            sched.pending.append(unpack(req))
+        for rd in snap["pending"]:
+            sched.pending.append(cls._unpack(rd))
         return sched
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:

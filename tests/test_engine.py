@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.models import lm
 from repro.optim import Hyper, OptimizerConfig
@@ -29,8 +29,10 @@ def run_both(family, optim_kind="sgd", steps=1, lr=0.05):
     policy = QuantPolicy.off()
     bits = default_bits(cfg, enabled=False)
 
-    tax_step = jax.jit(make_train_step(cfg, policy, ocfg, engine="taxonn"))
-    auto_step = jax.jit(make_train_step(cfg, policy, ocfg, engine="autodiff"))
+    tax_step = jax.jit(make_train_step(cfg, policy, ocfg,
+                                       StepOptions(engine="taxonn")))
+    auto_step = jax.jit(make_train_step(cfg, policy, ocfg,
+                                        StepOptions(engine="autodiff")))
 
     pt, po = params, init_train_state(params, ocfg)
     pa, ao = params, init_train_state(params, ocfg)

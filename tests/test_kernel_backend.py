@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.lenet import (init_lenet_params, lenet_bits, lenet_bits_off,
                               make_lenet_train_step)
 from repro.core.steps import default_bits, init_train_state
@@ -114,7 +114,7 @@ def _run_step(cfg, backend, steps=2):
     ocfg = OptimizerConfig()
     bits = default_bits(cfg, enabled=False)
     step = jax.jit(make_train_step(cfg, QuantPolicy.off(), ocfg,
-                                   kernel_backend=backend))
+                                   StepOptions(kernel_backend=backend)))
     p, o = params, init_train_state(params, ocfg)
     m = None
     for s in range(steps):
@@ -146,7 +146,7 @@ def test_backend_keeps_bits_as_runtime_data():
     batch = make_batch(cfg, t=32)
     ocfg = OptimizerConfig()
     step = jax.jit(make_train_step(cfg, QuantPolicy(), ocfg,
-                                   kernel_backend="emulate"))
+                                   StepOptions(kernel_backend="emulate")))
     hyper = Hyper(lr=jnp.float32(0.1), step=jnp.int32(0))
     state = init_train_state(params, ocfg)
     step(params, state, batch, hyper,

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.dist.async_collectives import (AsyncHandle, all_reduce_start,
                                           all_reduce_wait, group_size,
@@ -188,7 +188,7 @@ def test_overlap_single_device_bit_exact_compressed():
 def test_overlap_rejects_unknown_mode():
     with pytest.raises(ValueError, match="overlap"):
         make_train_step(tiny("dense"), QuantPolicy.off(), OptimizerConfig(),
-                        overlap="sometimes")
+                        StepOptions(overlap="sometimes"))
 
 
 def test_overlap_matrix_leg_trains(overlap):
@@ -198,7 +198,7 @@ def test_overlap_matrix_leg_trains(overlap):
     params = lm.init_params(jax.random.key(0), cfg)
     ocfg = OptimizerConfig()
     step = jax.jit(make_train_step(cfg, QuantPolicy.off(), ocfg,
-                                   overlap=overlap))
+                                   StepOptions(overlap=overlap)))
     _, _, m = step(params, init_train_state(params, ocfg),
                    make_batch(cfg, t=32),
                    Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
@@ -213,7 +213,7 @@ def test_overlap_multi_device_matches_blocking():
     out = run_py("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -259,7 +259,7 @@ def test_overlap_hlo_has_compute_in_collective_windows():
     out = run_py("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.dist.hlo_analysis import overlap_fraction
     from repro.models import lm
@@ -370,7 +370,7 @@ def test_hlo_overlap_fraction_differs_between_regimes():
     out = run_py("""
     import dataclasses, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.dist.hlo_analysis import overlap_fraction
     from repro.models import lm

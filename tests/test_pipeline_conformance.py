@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import (default_bits, init_train_state,
                               num_scan_units, pipeline_exec_capabilities)
 from repro.dist.pipeline import get_schedule
@@ -116,8 +116,8 @@ def test_pipeline_conformance(family, sched, virt, leg, kernel_backend,
      rng) = _fixture(family, leg, kernel_backend, overlap)
     step = jax.jit(make_train_step(
         cfg, pol, ocfg,
-        pipeline_schedule=get_schedule(sched, num_virtual=virt),
-        pipeline_stages=S_PIPE, num_microbatches=M_PIPE))
+        StepOptions(pipeline_schedule=get_schedule(sched, num_virtual=virt),
+                    pipeline_stages=S_PIPE, num_microbatches=M_PIPE)))
     mesh = make_debug_mesh(1, 1, pipe=4)
     with jax.set_mesh(mesh):
         p, _, m = step(params, state, batch, hyper, bits, rng)
@@ -161,9 +161,9 @@ def test_no_family_feature_combination_raises(family, leg):
         caps = pipeline_exec_capabilities(cfg, pol)
         assert all(caps.values()), (family, leg, ov, caps)
         step = make_train_step(cfg, pol, OptimizerConfig(),
-                               pipeline_schedule="1f1b",
-                               pipeline_stages=S_PIPE,
-                               num_microbatches=M_PIPE)
+                               StepOptions(pipeline_schedule="1f1b",
+                                           pipeline_stages=S_PIPE,
+                                           num_microbatches=M_PIPE))
         assert step.pipeline_schedule is not None
 
 
@@ -209,9 +209,9 @@ def test_pipe_axis_composes_with_data_axis(compress, overlap_mode):
                           quantize_grads=False, kernel_backend="off",
                           compress_dw=compress, dw_psum_axes=("data",),
                           dw_num_replicas=2, overlap=overlap_mode)
-        kw = (dict(pipeline_schedule="1f1b", pipeline_stages=4,
-                   num_microbatches=4) if pipe else {})
-        step = make_train_step(cfg, pol, ocfg, **kw)
+        opts = (StepOptions(pipeline_schedule="1f1b", pipeline_stages=4,
+                            num_microbatches=4) if pipe else StepOptions())
+        step = make_train_step(cfg, pol, ocfg, opts)
         f = jax.shard_map(lambda p, s, b: step(p, s, b, hyper, bits),
                           mesh=mesh, in_specs=(P(), P(), P("data")),
                           out_specs=(P(), P(), P()), check_vma=False)

@@ -171,7 +171,7 @@ def test_schedule_summary_keys():
 
 
 def test_train_step_threads_pipeline_metrics():
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -183,8 +183,9 @@ def test_train_step_threads_pipeline_metrics():
     params = lm.init_params(jax.random.key(0), cfg)
     ocfg = OptimizerConfig()
     step = jax.jit(make_train_step(
-        cfg, QuantPolicy.off(), ocfg, pipeline_schedule="1f1b",
-        pipeline_stages=4, num_microbatches=8))
+        cfg, QuantPolicy.off(), ocfg,
+        StepOptions(pipeline_schedule="1f1b", pipeline_stages=4,
+                    num_microbatches=8)))
     _, _, m = step(params, init_train_state(params, ocfg),
                    make_batch(cfg, b=8, t=32),
                    Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
@@ -194,9 +195,10 @@ def test_train_step_threads_pipeline_metrics():
     assert int(m["pipe_peak_mb"]) == 7
     with pytest.raises(ValueError, match="divis"):
         make_train_step(cfg, QuantPolicy.off(), ocfg,
-                        pipeline_schedule=get_schedule("interleaved",
-                                                       num_virtual=2),
-                        pipeline_stages=5, num_microbatches=8)
+                        StepOptions(
+                            pipeline_schedule=get_schedule("interleaved",
+                                                           num_virtual=2),
+                            pipeline_stages=5, num_microbatches=8))
 
 
 def test_pipeline_execution_build_time_validation():
@@ -204,15 +206,15 @@ def test_pipeline_execution_build_time_validation():
     family/feature allowlist is gone — every family and every QuantPolicy
     feature now BUILDS (capability detection, exercised exhaustively in
     tests/test_pipeline_conformance.py)."""
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.optim import OptimizerConfig
     from test_models import tiny
 
     ocfg = OptimizerConfig()
     with pytest.raises(ValueError, match="does not divide"):
         make_train_step(tiny("dense", num_layers=3), QuantPolicy.off(), ocfg,
-                        pipeline_schedule="1f1b", pipeline_stages=2,
-                        num_microbatches=4)
+                        StepOptions(pipeline_schedule="1f1b",
+                                    pipeline_stages=2, num_microbatches=4))
     # formerly NotImplementedError: hybrid (shared attn), compress_dw,
     # overlap="on" — all supported since the shared-operand story landed
     for cfg, pol in (
@@ -221,8 +223,10 @@ def test_pipeline_execution_build_time_validation():
             (tiny("dense", num_layers=4), QuantPolicy(overlap="on")),
             (tiny("encdec", num_layers=4), QuantPolicy(stochastic=True)),
             (tiny("moe", num_layers=4), QuantPolicy(quantize_updates=True))):
-        step = make_train_step(cfg, pol, ocfg, pipeline_schedule="gpipe",
-                               pipeline_stages=2, num_microbatches=4)
+        step = make_train_step(cfg, pol, ocfg,
+                               StepOptions(pipeline_schedule="gpipe",
+                                           pipeline_stages=2,
+                                           num_microbatches=4))
         assert step.pipeline_schedule is not None
 
 
@@ -236,7 +240,7 @@ def test_engine_stack_executes_through_pipeline(quant):
     pipeline_apply: loss bit-exact and updated params within float
     reassociation of the single-device reverse scan, for all three
     schedules (incl. the quantized G-chain via the grad taps)."""
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -254,9 +258,10 @@ def test_engine_stack_executes_through_pipeline(quant):
         params, state, batch, hyper, bits)
     for sname, virt in (("gpipe", None), ("1f1b", None), ("interleaved", 2)):
         step = jax.jit(make_train_step(
-            cfg, pol, ocfg, pipeline_schedule=get_schedule(sname,
-                                                           num_virtual=virt),
-            pipeline_stages=4, num_microbatches=4))
+            cfg, pol, ocfg,
+            StepOptions(pipeline_schedule=get_schedule(sname,
+                                                       num_virtual=virt),
+                        pipeline_stages=4, num_microbatches=4)))
         p1, _, m1 = step(params, state, batch, hyper, bits)
         assert float(m0["loss"]) == float(m1["loss"]), sname
         worst = max(float(jnp.abs(a - b).max())
@@ -271,7 +276,7 @@ def test_engine_stack_pipe_mesh_exact():
     the single-device scan for all three schedules."""
     out = run_py("""
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.dist.pipeline import get_schedule
     from repro.launch.mesh import make_debug_mesh
@@ -294,8 +299,9 @@ def test_engine_stack_pipe_mesh_exact():
     for sname, virt in (("gpipe", None), ("1f1b", None), ("interleaved", 2)):
         step = jax.jit(make_train_step(
             cfg, pol, ocfg,
-            pipeline_schedule=get_schedule(sname, num_virtual=virt),
-            pipeline_stages=4, num_microbatches=4))
+            StepOptions(pipeline_schedule=get_schedule(sname,
+                                                       num_virtual=virt),
+                        pipeline_stages=4, num_microbatches=4)))
         with jax.set_mesh(mesh):
             p1, _, m1 = step(params, state, batch, hyper, bits)
         assert float(m0["loss"]) == float(m1["loss"]), sname

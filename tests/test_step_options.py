@@ -1,0 +1,176 @@
+"""StepOptions + the deprecation shims of the PR-8 API redesign.
+
+``make_train_step`` consolidated seven per-knob keywords into one frozen
+``StepOptions`` value; ``BatchScheduler`` replaced its positional callable
+triple with (ServeConfig, EngineHooks).  Both old surfaces must keep
+working — through adapters that emit DeprecationWarnings — and the old
+``eos_id=-1`` sentinel must warn and map to an explicit ``None``.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantPolicy, StepOptions, make_train_step
+from repro.core.steps import default_bits, init_train_state
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig
+from repro.serving import BatchScheduler, EngineHooks, Request, ServeConfig
+from test_models import make_batch, tiny
+
+
+# ---------------------------------------------------------------------------
+# StepOptions the value
+# ---------------------------------------------------------------------------
+
+def test_step_options_validation():
+    with pytest.raises(ValueError, match="engine"):
+        StepOptions(engine="magic")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        StepOptions(kernel_backend="fpga")
+    with pytest.raises(ValueError, match="overlap"):
+        StepOptions(overlap="sometimes")
+    with pytest.raises(ValueError, match="transport"):
+        StepOptions(transport="smoke-signal")
+
+
+def test_step_options_from_policy_and_replace():
+    pol = QuantPolicy(kernel_backend="emulate", overlap="on",
+                      dw_transport="psum")
+    opts = StepOptions.from_policy(pol)
+    assert (opts.kernel_backend, opts.overlap, opts.transport) == \
+        ("emulate", "on", "psum")
+    over = StepOptions.from_policy(pol, transport="ring", engine="autodiff")
+    assert over.transport == "ring" and over.engine == "autodiff"
+    assert over.overlap == "on"
+    rep = opts.replace(overlap="off")
+    assert rep.overlap == "off" and opts.overlap == "on"  # frozen original
+
+
+def _train_one(step_builder):
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    ocfg = OptimizerConfig()
+    step = jax.jit(step_builder(cfg, ocfg))
+    p, o, m = step(params, init_train_state(params, ocfg),
+                   make_batch(cfg, t=32),
+                   Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),
+                   default_bits(cfg, enabled=False))
+    return float(m["loss"])
+
+
+def test_options_equivalent_to_legacy_kwargs():
+    """The same knobs through options= and through the deprecated kwargs
+    build identical steps (same loss on the same batch)."""
+    loss_opts = _train_one(lambda cfg, ocfg: make_train_step(
+        cfg, QuantPolicy.off(), ocfg,
+        StepOptions(engine="taxonn", kernel_backend="off")))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        loss_kw = _train_one(lambda cfg, ocfg: make_train_step(
+            cfg, QuantPolicy.off(), ocfg, engine="taxonn",
+            kernel_backend="off"))
+    assert loss_opts == loss_kw
+
+
+# ---------------------------------------------------------------------------
+# The deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_step_kwargs_warn_but_work():
+    cfg = tiny("dense")
+    with pytest.warns(DeprecationWarning, match="options=StepOptions"):
+        step = make_train_step(cfg, QuantPolicy.off(), OptimizerConfig(),
+                               engine="autodiff")
+    assert callable(step)
+
+
+def test_legacy_step_kwargs_reject_unknown_and_clash():
+    cfg = tiny("dense")
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        make_train_step(cfg, QuantPolicy.off(), OptimizerConfig(),
+                        turbo=True)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="both options="):
+            make_train_step(cfg, QuantPolicy.off(), OptimizerConfig(),
+                            StepOptions(overlap="on"), overlap="off")
+
+
+def test_new_step_api_emits_no_warnings():
+    cfg = tiny("dense")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        make_train_step(cfg, QuantPolicy.off(), OptimizerConfig(),
+                        StepOptions())
+
+
+# ---------------------------------------------------------------------------
+# Scheduler ctor adapter + eos sentinel
+# ---------------------------------------------------------------------------
+
+def _contiguous_hooks(cfg, params, num_slots, max_len=32):
+    sc = ServeConfig(num_slots=num_slots, eos_id=None, max_len=max_len,
+                     mode="contiguous", cache_dtype="float32")
+    return EngineHooks.for_model(params, cfg, sc)
+
+
+def test_legacy_scheduler_ctor_warns_and_runs():
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    h = _contiguous_hooks(cfg, params, 2)
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        sched = BatchScheduler(2, h.prefill, h.decode, h.merge, h.init_state)
+    assert sched.eos_id is None          # the -1 sentinel became explicit
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        sched.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32),
+            max_new_tokens=4))
+    done = sched.run_until_drained()
+    assert len(done) == 2 and all(len(r.generated) == 4 for r in done)
+
+
+def test_eos_sentinel_warns_everywhere():
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    h = _contiguous_hooks(cfg, params, 1)
+    with pytest.warns(DeprecationWarning, match="sentinel"):
+        BatchScheduler(1, h.prefill, h.decode, h.merge, h.init_state,
+                       eos_id=-1)
+    with pytest.warns(DeprecationWarning, match="sentinel"):
+        sc = ServeConfig(num_slots=1, eos_id=-1, mode="contiguous")
+    assert sc.eos_id is None
+    # a real eos id passes through the legacy ctor without the sentinel warn
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        BatchScheduler(1, h.prefill, h.decode, h.merge, h.init_state,
+                       eos_id=7)
+    assert not any("sentinel" in str(w.message) for w in rec)
+
+
+def test_new_scheduler_api_emits_no_warnings():
+    cfg = tiny("dense")
+    params = lm.init_params(jax.random.key(0), cfg)
+    sc = ServeConfig(num_slots=1, eos_id=None, max_len=32,
+                     mode="contiguous", cache_dtype="float32")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        BatchScheduler(sc, EngineHooks.for_model(params, cfg, sc))
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        ServeConfig(num_slots=1, eos_id=None, mode="virtual")
+    with pytest.raises(ValueError, match="admission"):
+        ServeConfig(num_slots=1, eos_id=None, admission="lottery")
+    with pytest.raises(ValueError, match="multiple"):
+        ServeConfig(num_slots=1, eos_id=None, max_len=60, block_size=8)
+    with pytest.raises(ValueError, match="cache_dtype"):
+        ServeConfig(num_slots=1, eos_id=None, cache_dtype="fp4")
+    sc = ServeConfig(num_slots=3, eos_id=None, max_len=64, block_size=8)
+    assert sc.max_blocks_per_seq == 8
+    assert sc.resolved_num_blocks == 1 + 3 * (8 + 2)  # +2 COW/admission slack
+    assert sc.chunk_tokens == 8

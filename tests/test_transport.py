@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import QuantPolicy, make_train_step
+from repro.core import QuantPolicy, StepOptions, make_train_step
 from repro.core.steps import default_bits, init_train_state
 from repro.core.taxonn import overlap_depth_for
 from repro.dist.async_collectives import (TRANSPORTS, all_reduce_start,
@@ -170,7 +170,7 @@ def test_autotuned_matches_forced_psum_bitwise_dense():
     out = run_py("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -261,7 +261,7 @@ def test_forced_ring_env_matches_blocking_on_step():
     os.environ["REPRO_TRANSPORT"] = "ring"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -339,7 +339,7 @@ def test_forced_scatter_sharded_update_matches_psum_step():
     import os
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -388,7 +388,7 @@ def test_scatter_degrades_to_blocking_update_for_stateful_optimizer():
     os.environ["REPRO_TRANSPORT"] = "scatter"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -473,7 +473,7 @@ def test_overlap_depth_2_multi_device_ring_matches_blocking():
     out = run_py("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import QuantPolicy, make_train_step
+    from repro.core import QuantPolicy, StepOptions, make_train_step
     from repro.core.steps import default_bits, init_train_state
     from repro.models import lm
     from repro.optim import Hyper, OptimizerConfig
@@ -516,13 +516,14 @@ def test_overlap_depth_2_multi_device_ring_matches_blocking():
 def test_make_train_step_transport_override():
     with pytest.raises(ValueError, match="transport"):
         make_train_step(tiny("dense"), QuantPolicy.off(), OptimizerConfig(),
-                        transport="smoke-signal")
+                        StepOptions(transport="smoke-signal"))
     # a valid override lands in the policy and the step still trains
     cfg = tiny("dense")
     params = lm.init_params(jax.random.key(0), cfg)
     ocfg = OptimizerConfig()
     step = jax.jit(make_train_step(cfg, QuantPolicy.off(), ocfg,
-                                   overlap="on", transport="psum"))
+                                   StepOptions(overlap="on",
+                                               transport="psum")))
     _, _, m = step(params, init_train_state(params, ocfg),
                    make_batch(cfg, t=32),
                    Hyper(lr=jnp.float32(0.01), step=jnp.int32(0)),

@@ -1,0 +1,76 @@
+"""Hard decode gate: the fused decode prologue must not be a slowdown.
+
+    python benchmarks/check_decode_speedup.py --fresh BENCH_serving.fresh.json
+
+Reads the fresh serving-suite JSON and fails (exit 1) when the
+``serving/decode_fused`` row's ``prologue_speedup`` (= its tokens/sec
+over the unfused ``serving/paged_chunked`` row's, measured on the same
+arrival trace in the same run) is below the threshold.  The fused
+RMSNorm+QKV+rope prologue exists to cut one HBM round-trip per decode
+layer; if turning it on loses throughput, that must fail loudly instead
+of shipping as a row nobody reads.
+
+When the row carries ``interpret: true`` the kernels ran through the
+Pallas CPU interpreter, which measures structure, not speed — the gate
+degrades to warn-only (printed, exit 0), mirroring the overlap gate's
+device-count escape hatch.  A fresh file with no ``serving/decode_fused``
+row, or a row with no ``prologue_speedup`` field, is an error: the suite
+silently not emitting the gated measurement must not read as a pass.
+
+``--min-speedup`` defaults to 1.0; REPRO_DECODE_MIN_SPEEDUP overrides it
+(CI escape hatch, mirroring REPRO_SERVING_MIN_SPEEDUP).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def find_row(rows: list, name: str):
+    for r in rows:
+        if r.get("name") == name:
+            return r
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="fresh serving-suite JSON (benchmarks.run --json)")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required fused-over-unfused tokens/sec ratio "
+                         "(default 1.0: the fused prologue must not lose)")
+    args = ap.parse_args(argv)
+    min_speedup = float(os.environ.get("REPRO_DECODE_MIN_SPEEDUP",
+                                       args.min_speedup))
+
+    with open(args.fresh) as f:
+        rows = json.load(f)
+    row = find_row(rows, "serving/decode_fused")
+    if row is None:
+        print("error: no serving/decode_fused row in the fresh run — "
+              "the serving suite did not produce the gated measurement")
+        return 1
+    speedup = row.get("prologue_speedup")
+    if speedup is None:
+        print("error: serving/decode_fused row carries no prologue_speedup "
+              "field — cannot gate")
+        return 1
+    if speedup < min_speedup:
+        msg = (f"serving/decode_fused: prologue_speedup x{speedup:.3f} < "
+               f"x{min_speedup:.2f} — the fused decode prologue is a "
+               f"measured slowdown vs the unfused norm+project+rope chain")
+        if row.get("interpret"):
+            print(f"WARN (interpret-mode kernels, not gating) {msg}")
+            return 0
+        print(f"FAIL {msg}")
+        return 1
+    print(f"decode speedup gate OK: x{speedup:.3f} >= x{min_speedup:.2f} "
+          f"({row.get('tok_per_s')} tok/s fused vs unfused paged baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,34 @@
-"""Kernel microbenchmarks: us_per_call of the four TaxoNN Pallas kernels
+"""Kernel microbenchmarks: us_per_call of the TaxoNN Pallas kernels
 (interpret mode on CPU — structural check; Mosaic-compiled on TPU) against
 their XLA-fused jnp references, on both datapaths (f32 emulation and the
-int8 MXU path)."""
+int8 MXU path).
+
+Two row families:
+
+  kernels/<op>                    the original square-shape smoke rows
+  kernels/fxp_matmul/<arch>_<x>   production-shape sweep: each arch's
+                                  hottest matmul at its REAL geometry
+                                  (GQA QKV projections, MoE expert mats,
+                                  SSD in-projection) on the int8 datapath;
+                                  the note records the tune_blocks pick
+  kernels/decode_prologue         the fused RMSNorm+QKV+rope decode
+                                  prologue vs the unfused op chain
+
+The run also dumps the autotuner's decision cache to
+``tune_cache.fresh.json`` (CI uploads it next to
+``transport_cache.fresh.json``; REPRO_TUNE_CACHE preloads it elsewhere).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op, fxp_matmul_op,
-                               sgd_dw_update_op)
+from repro.kernels.ops import (bp_fused_unit_op, bp_gstep_op,
+                               dump_tune_cache, fxp_matmul_op,
+                               sgd_dw_update_op, tune_blocks)
 
 
 def _timeit(fn, *args, reps=5):
@@ -21,6 +39,78 @@ def _timeit(fn, *args, reps=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / reps * 1e6
+
+
+def _config_sweep(quick: bool):
+    """Per-arch rows at REAL production shapes (t tokens worth of rows
+    against the arch's hot weight matrix), int8 MXU datapath vs the jnp
+    int8 reference.  t is small — these measure the n*k weight streaming
+    the decode/train hot loop actually does, not a square toy."""
+    from repro.configs import get_config
+
+    t = 8 if quick else 16
+    specs = []
+    for arch in ("gemma-7b", "yi-34b"):
+        c = get_config(arch)
+        n = (c.num_heads + 2 * c.num_kv_heads) * c.head_dim
+        specs.append((arch, "qkv", t, n, c.d_model))
+    for arch in ("mixtral-8x7b", "deepseek-v2-lite-16b"):
+        c = get_config(arch)
+        specs.append((arch, "moe_expert", t, int(c.moe_d_ff), c.d_model))
+    c = get_config("mamba2-370m")
+    specs.append(("mamba2-370m", "ssd_inproj", t, 2 * c.d_inner, c.d_model))
+
+    jref = jax.jit(lambda a, b: ref.fxp_matmul_int8_ref(a, b))
+
+    def mm_i8(a, b):
+        return fxp_matmul_op(a, b, datapath="int8")
+
+    rows = []
+    for arch, kind, m, n, k in specs:
+        x = jax.random.normal(jax.random.key(10), (m, k))
+        w = jax.random.normal(jax.random.key(11), (k, n)) * (k ** -0.5)
+        rows.append({
+            "name": f"kernels/fxp_matmul/{arch}_{kind}",
+            "us_per_call": _timeit(mm_i8, x, w, reps=2),
+            "ref_us": _timeit(jref, x, w, reps=2),
+            "shape": f"{m}x{n}x{k}",
+            "note": f"tune_blocks={tune_blocks(m, n, k, itemsize=1)}",
+        })
+    return rows
+
+
+def _prologue_row():
+    """Fused decode-prologue kernel vs the unfused norm+project+rope op
+    chain, at the serving bench's model geometry (B=8 decode batch)."""
+    from repro.kernels import decode_prologue as DP
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="bench-prologue", family="dense", num_layers=1, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=512,
+        compute_dtype="float32")
+    b, d, h, hkv, hd = 8, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.head_dim
+    norm = {"scale": jnp.ones((d,), jnp.float32)}
+    attn = {
+        "wq": jax.random.normal(jax.random.key(20), (d, h, hd)) * 0.02,
+        "wk": jax.random.normal(jax.random.key(21), (d, hkv, hd)) * 0.02,
+        "wv": jax.random.normal(jax.random.key(22), (d, hkv, hd)) * 0.02,
+    }
+    x = jax.random.normal(jax.random.key(23), (b, 1, d), jnp.float32)
+    pos = jnp.full((b,), 17, jnp.int32)
+
+    fused = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+    unfused = jax.jit(lambda xx: L._project_qkv(
+        attn, L.apply_norm(norm, xx, cfg), cfg, pos[:, None]))
+    return {
+        "name": "kernels/decode_prologue",
+        "us_per_call": _timeit(fused, x),
+        "ref_us": _timeit(unfused, x),
+        "shape": f"b{b}_d{d}_h{h}kv{hkv}x{hd}",
+        "note": "fused RMSNorm+QKV+rope vs the unfused op chain",
+    }
 
 
 def run(quick: bool = False):
@@ -49,7 +139,7 @@ def run(quick: bool = False):
         return bp_fused_unit_op(a, b, c, d, 0.01, datapath="int8")
 
     shape = f"{m}x{m}x{m}"
-    return [{
+    rows = [{
         "name": "kernels/fxp_matmul",
         "us_per_call": _timeit(fxp_matmul_op, x, w),
         "ref_us": _timeit(jref_mm, x, w),
@@ -84,3 +174,7 @@ def run(quick: bool = False):
         "ref_us": _timeit(jref_f8, g, w, x, z),
         "shape": shape,
     }]
+    rows += _config_sweep(quick)
+    rows.append(_prologue_row())
+    dump_tune_cache("tune_cache.fresh.json")
+    return rows

@@ -17,6 +17,13 @@ the SAME model params:
                          ``int8_speedup`` (design point over this row) —
                          on CPU CI bf16 is emulated, so this overstates
                          the int8 win vs real accelerator bf16
+  serving/decode_fused   the design point again with the fused decode-
+                         prologue kernel on (kernel_backend="emulate");
+                         carries ``prologue_speedup`` = its tokens/sec
+                         over the paged_chunked row's, gated >= 1.0 by
+                         benchmarks/check_decode_speedup.py — warn-only
+                         when ``interpret`` is true (CPU interpret-mode
+                         Pallas measures structure, not speed)
 
 Every row reports tokens/sec and per-request completion-latency p50/p99
 (submit-to-done, milliseconds).  ``us_per_call`` is per generated token.
@@ -155,4 +162,13 @@ def run(quick: bool = False):
                  **r_bf,
                  "int8_speedup": round(r_p["tok_per_s"] / r_bf["tok_per_s"],
                                        3)})
+
+    from repro.kernels import ops as kops
+    r_fu, _ = _variant(
+        params, cfg, paged.replace(kernel_backend="emulate"), n_req, seed=0)
+    rows.append({"name": "serving/decode_fused", "cache_dtype": "int8",
+                 **r_fu,
+                 "prologue_speedup": round(r_fu["tok_per_s"]
+                                           / r_p["tok_per_s"], 3),
+                 "interpret": bool(kops._on_cpu())})
     return rows

@@ -99,16 +99,20 @@ def capture_resume_extra(cfg: ModelConfig, step: int, *, loader=None,
     recording the step pins the whole stream, and (c) the primed transport
     cache, so the resumed backward scan instantiates the SAME collective
     schedule the killed run measured (a re-measurement could flip a
-    ring/psum/scatter decision and change reduction order).  Everything is
+    ring/psum/scatter decision and change reduction order), and (d) the
+    kernel tune cache, so a resumed run replays the SAME block-shape /
+    fusion decisions instead of re-deriving them.  Everything is
     msgpack-scalar/str, so it rides the checkpoint manifest unchanged.
     """
     from repro.dist.async_collectives import transport_cache_snapshot
+    from repro.kernels.ops import tune_cache_snapshot
     extra = {
         "resume_schema": RESUME_SCHEMA,
         "arch": cfg.name,
         "family": cfg.family,
         "data_step": int(step),
         "transport_cache": transport_cache_snapshot(),
+        "tune_cache": tune_cache_snapshot(),
     }
     if loader is not None:
         extra["loader"] = {"served": int(loader.served),
@@ -142,6 +146,13 @@ def apply_resume_extra(extra: dict, cfg: ModelConfig,
         n = load_transport_cache(cache)
         if n:
             print(f"[train] restored {n} transport-cache decision(s) from "
+                  f"checkpoint", flush=True)
+    tune = extra.get("tune_cache")
+    if tune:
+        from repro.kernels.ops import load_tune_cache
+        n = load_tune_cache(tune)
+        if n:
+            print(f"[train] restored {n} tune-cache decision(s) from "
                   f"checkpoint", flush=True)
     return int(extra.get("data_step", ckpt_step))
 

@@ -1,0 +1,296 @@
+"""Fused decode-prologue kernel: RMSNorm + QKV projection + RoPE in one
+``pallas_call`` — one HBM round-trip for the whole decode prologue.
+
+The unfused decode prologue (``models.layers.apply_norm`` then
+``_project_qkv``) writes the normed residual back to HBM, re-reads it for
+each of the three projections, and re-reads q/k again for the rotation —
+exactly the per-layer data-flow staging TaxoNN's time-multiplexed frame
+collapses.  Here ONE grid step takes the whole slot batch: decode rows
+are [B, D] with small B (the slot count), so batching them into a single
+VMEM-resident matmul frame uses the MXU where B row-at-a-time gemvs
+would not — the body norms all residual rows, runs the three projections
+against the resident QKV weights, adds biases, and rotates q/k in place;
+v is never rope'd, matching ``_project_qkv``.
+
+The math is op-for-op the unfused path's (rmsnorm formula, dt-cast
+weights, rope half-rotation), shared between the kernel body and the
+jitted ``_ref`` fallback at the same batched shapes — same ops at the
+same shapes is what makes kernel and ref BITWISE identical in interpret
+mode (a [1, D] row-at-a-time dot would round differently from the
+batched dot), and both bitwise identical to ``apply_norm`` +
+``_project_qkv`` under jit (tested in tests/test_decode_prologue).
+
+The int8 datapath variant rides ``quant/int8.py``'s grid: weights carry
+per-tensor absmax scales (quantized once outside the call), the normed
+activation row is quantized per-row, the MACs run int8 x int8 -> int32
+(``common.int8_dot``), and one rescale lands the dt output before bias +
+rope.  Its contract is bitwise vs ``_ref_int8`` (not vs the f32 path).
+
+``decode_prologue`` picks kernel vs ref with ``ops.tune_prologue``: the
+kernel when the weight-resident VMEM budget admits the model's head
+geometry, the jnp fallback otherwise — semantics identical either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ops as kops
+from repro.kernels.common import int8_dot
+from repro.quant.int8 import quantize_int8, quantize_int8_absmax
+
+
+# ---------------------------------------------------------------------------
+# Shared row math — the bitwise contract between kernel body and ref
+# ---------------------------------------------------------------------------
+
+def _rms_rows(x2, nscale, eps: float):
+    """Row-wise rmsnorm, op-for-op ``models.layers.rmsnorm``.  x2: [R, D];
+    nscale: [1, D] f32 (the norm's scale param)."""
+    dtype = x2.dtype
+    xf = x2.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * nscale).astype(dtype)
+
+
+def _rope_rows(x3, positions, theta: float):
+    """Half-rotation rope, op-for-op ``models.layers.apply_rope`` with the
+    T=1 axis squeezed.  x3: [R, H, hd]; positions: [R]."""
+    hd = x3.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [R, hd/2]
+    cos = jnp.cos(angles)[:, None, :]                          # [R, 1, hd/2]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = jnp.split(x3.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x3.dtype)
+
+
+def _prologue_rows(x2, nscale, wq2, wk2, wv2, biases, positions, *,
+                   use_rope: bool, theta: float, eps: float,
+                   h: int, hkv: int, hd: int):
+    """norm -> 3 projections -> bias -> rope over R token rows.  Weights
+    arrive 2D ([D, H*hd]) and are dt-cast exactly like ``_project_qkv``."""
+    dt = x2.dtype
+    xn = _rms_rows(x2, nscale, eps)
+    q = jnp.dot(xn, wq2.astype(dt)).reshape(-1, h, hd)
+    k = jnp.dot(xn, wk2.astype(dt)).reshape(-1, hkv, hd)
+    v = jnp.dot(xn, wv2.astype(dt)).reshape(-1, hkv, hd)
+    if biases is not None:
+        bq, bk, bv = biases
+        q = q + bq.astype(dt)
+        k = k + bk.astype(dt)
+        v = v + bv.astype(dt)
+    if use_rope:
+        q = _rope_rows(q, positions, theta)
+        k = _rope_rows(k, positions, theta)
+    return q, k, v
+
+
+def _prologue_rows_int8(x2, nscale, qwq, qwk, qwv, wscales, biases,
+                        positions, *, use_rope: bool, theta: float,
+                        eps: float, h: int, hkv: int, hd: int):
+    """Int8 datapath: per-row absmax quant of the normed activation, int32
+    MACs against the per-tensor-scaled int8 weights, one rescale."""
+    dt = x2.dtype
+    xn = _rms_rows(x2, nscale, eps)
+    xf = xn.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)                       # [R]
+    sx = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    qx = quantize_int8(xf, sx[:, None])
+
+    def proj(qw, sw, heads):
+        acc = int8_dot(qx, qw).astype(jnp.float32)
+        return (acc * (sx[:, None] * sw)).astype(dt).reshape(-1, heads, hd)
+
+    q = proj(qwq, wscales[0, 0], h)
+    k = proj(qwk, wscales[0, 1], hkv)
+    v = proj(qwv, wscales[0, 2], hkv)
+    if biases is not None:
+        bq, bk, bv = biases
+        q = q + bq.astype(dt)
+        k = k + bk.astype(dt)
+        v = v + bv.astype(dt)
+    if use_rope:
+        q = _rope_rows(q, positions, theta)
+        k = _rope_rows(k, positions, theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (one grid step per decode slot)
+# ---------------------------------------------------------------------------
+
+def _kernel(pos_ref, x_ref, ns_ref, wq_ref, wk_ref, wv_ref, *rest,
+            int8: bool, qkv_bias: bool, use_rope: bool, theta: float,
+            eps: float, h: int, hkv: int, hd: int):
+    # ONE grid step for the whole slot batch: decode rows are [B, D] with
+    # small B (the slot count), so batching them into a single MXU matmul
+    # frame beats B separate gemvs — and running the ref's exact batched op
+    # sequence is what keeps kernel and ref BITWISE identical (a [1, D]
+    # row-at-a-time dot rounds differently from the batched dot).
+    i = 0
+    biases = None
+    if qkv_bias:
+        biases = (rest[0][...], rest[1][...], rest[2][...])
+        i = 3
+    if int8:
+        wscales = rest[i][...]
+        i += 1
+    oq_ref, ok_ref, ov_ref = rest[i], rest[i + 1], rest[i + 2]
+    pos = pos_ref[...]                                         # [B]
+    if int8:
+        q, k, v = _prologue_rows_int8(
+            x_ref[...], ns_ref[...], wq_ref[...], wk_ref[...], wv_ref[...],
+            wscales, biases, pos, use_rope=use_rope, theta=theta, eps=eps,
+            h=h, hkv=hkv, hd=hd)
+    else:
+        q, k, v = _prologue_rows(
+            x_ref[...], ns_ref[...], wq_ref[...], wk_ref[...], wv_ref[...],
+            biases, pos, use_rope=use_rope, theta=theta, eps=eps,
+            h=h, hkv=hkv, hd=hd)
+    oq_ref[...] = q
+    ok_ref[...] = k
+    ov_ref[...] = v
+
+
+# ---------------------------------------------------------------------------
+# jnp fallbacks — the same row math batched over all slots
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "use_rope", "theta", "eps", "h", "hkv", "hd"))
+def _ref(x2, nscale, wq2, wk2, wv2, biases, positions, *, use_rope: bool,
+         theta: float, eps: float, h: int, hkv: int, hd: int):
+    return _prologue_rows(x2, nscale, wq2, wk2, wv2, biases, positions,
+                          use_rope=use_rope, theta=theta, eps=eps,
+                          h=h, hkv=hkv, hd=hd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "use_rope", "theta", "eps", "h", "hkv", "hd"))
+def _ref_int8(x2, nscale, qwq, qwk, qwv, wscales, biases, positions, *,
+              use_rope: bool, theta: float, eps: float, h: int, hkv: int,
+              hd: int):
+    return _prologue_rows_int8(x2, nscale, qwq, qwk, qwv, wscales, biases,
+                               positions, use_rope=use_rope, theta=theta,
+                               eps=eps, h=h, hkv=hkv, hd=hd)
+
+
+def _call_kernel(x2, nscale, wq2, wk2, wv2, wscales, biases, positions, *,
+                 int8: bool, use_rope: bool, theta: float, eps: float,
+                 h: int, hkv: int, hd: int):
+    b, d = x2.shape
+    dt = x2.dtype
+
+    def full(x):
+        nd = x.ndim
+        return pl.BlockSpec(x.shape, lambda i, *_, _nd=nd: (0,) * _nd)
+
+    in_specs = [full(x2), full(nscale), full(wq2), full(wk2), full(wv2)]
+    args = [x2, nscale, wq2, wk2, wv2]
+    if biases is not None:
+        in_specs += [full(bb) for bb in biases]
+        args += list(biases)
+    if int8:
+        in_specs += [full(wscales)]
+        args += [wscales]
+    body = functools.partial(_kernel, int8=int8, qkv_bias=biases is not None,
+                             use_rope=use_rope, theta=theta, eps=eps,
+                             h=h, hkv=hkv, hd=hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=[full(jax.ShapeDtypeStruct((b, h, hd), dt)),
+                   full(jax.ShapeDtypeStruct((b, hkv, hd), dt)),
+                   full(jax.ShapeDtypeStruct((b, hkv, hd), dt))],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, h, hd), dt),
+                   jax.ShapeDtypeStruct((b, hkv, hd), dt),
+                   jax.ShapeDtypeStruct((b, hkv, hd), dt)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=kops._on_cpu(),
+    )(positions.astype(jnp.int32), *args)
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+
+def prologue_supported(cfg) -> bool:
+    """Head geometries the fused prologue covers: rmsnorm front (layernorm
+    archs keep the unfused path), standard GQA/MHA heads (no MLA latent
+    projections), lane-aligned head dim."""
+    return (cfg.norm_kind == "rmsnorm" and not cfg.use_mla
+            and cfg.num_heads > 0 and cfg.head_dim % 8 == 0
+            and cfg.d_model % 8 == 0)
+
+
+def prologue_active(cfg, x) -> bool:
+    """Whether the decode step should ride the fused prologue: supported
+    geometry, the kernel datapath enabled (``KernelBackend`` != off), and a
+    single-token row (prefill chunks keep the batched unfused path)."""
+    return (prologue_supported(cfg) and kops.current_backend() != "off"
+            and x.shape[1] == 1)
+
+
+def decode_prologue(norm_params, attn_params, x, cfg, positions):
+    """Fused RMSNorm + QKV + rope for one decode token per slot.
+
+    x: [B, 1, D] residual stream; positions: [B] int32 (each slot's
+    absolute token position); norm/attn params are the block's unfused
+    parameter dicts (weights are reshaped, never copied out of the tree).
+    Returns (q [B,1,H,hd], k [B,1,Hkv,hd], v [B,1,Hkv,hd]) — exactly what
+    ``apply_norm`` + ``_project_qkv`` produce, in one HBM round-trip.
+    """
+    b, t, d = x.shape
+    assert t == 1, x.shape
+    wq, wk, wv = attn_params["wq"], attn_params["wk"], attn_params["wv"]
+    _, h, hd = wq.shape
+    hkv = wk.shape[1]
+    wq2 = wq.reshape(d, h * hd)
+    wk2 = wk.reshape(d, hkv * hd)
+    wv2 = wv.reshape(d, hkv * hd)
+    nscale = norm_params["scale"].reshape(1, d)
+    biases = None
+    if cfg.qkv_bias:
+        biases = (attn_params["bq"], attn_params["bk"], attn_params["bv"])
+    pos = positions.astype(jnp.int32)
+    x2 = x[:, 0, :]
+    stat = dict(use_rope=bool(cfg.use_rope), theta=float(cfg.rope_theta),
+                eps=float(cfg.norm_eps), h=h, hkv=hkv, hd=hd)
+
+    int8 = kops.current_backend() == "int8"
+    itemsize = 1 if int8 else x.dtype.itemsize
+    fits = kops.tune_prologue(d, h, hkv, hd, itemsize=itemsize)
+    if int8:
+        qwq, swq = quantize_int8_absmax(wq2)
+        qwk, swk = quantize_int8_absmax(wk2)
+        qwv, swv = quantize_int8_absmax(wv2)
+        wscales = jnp.stack([swq, swk, swv]).reshape(1, 3)
+        if fits is None:
+            q, k, v = _ref_int8(x2, nscale, qwq, qwk, qwv, wscales, biases,
+                                pos, **stat)
+        else:
+            q, k, v = _call_kernel(x2, nscale, qwq, qwk, qwv, wscales,
+                                   biases, pos, int8=True, **stat)
+    else:
+        if fits is None:
+            q, k, v = _ref(x2, nscale, wq2, wk2, wv2, biases, pos, **stat)
+        else:
+            q, k, v = _call_kernel(x2, nscale, wq2, wk2, wv2, None, biases,
+                                   pos, int8=False, **stat)
+    return q[:, None], k[:, None], v[:, None]

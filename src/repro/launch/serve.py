@@ -11,6 +11,7 @@ contiguous per-slot cache, with per-request latency accounting.
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -45,6 +46,14 @@ def main(argv=None):
                     help="KV storage dtype (default: the compute dtype)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop at this token id (default: run to max-new)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["auto", "off", "emulate", "int8"],
+                    help="decode-hook kernel backend: non-off enables the "
+                         "fused decode-prologue kernel (default: unset, "
+                         "unfused decode)")
+    ap.add_argument("--profile", type=int, default=0, metavar="N",
+                    help="capture a jax.profiler trace of the first N "
+                         "scheduler ticks (trace directory printed at exit)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -61,20 +70,49 @@ def main(argv=None):
                         max_len=args.max_len, mode=mode,
                         block_size=args.block_size,
                         prefill_chunk=args.prefill_chunk,
-                        cache_dtype=cache_dtype)
+                        cache_dtype=cache_dtype,
+                        kernel_backend=args.kernel_backend)
     print(f"[serve] {cfg.name} ({cfg.family}) slots={args.slots} "
-          f"mode={mode} cache={cache_dtype}", flush=True)
+          f"mode={mode} cache={cache_dtype} "
+          f"kernel_backend={args.kernel_backend or 'unset'}", flush=True)
+
+    if mode == "paged":
+        # prime the kernel tune cache for this serve's decode shapes (paged
+        # attention + fused prologue) so the first decode tick traces
+        # against stable decisions instead of deriving them mid-trace
+        from repro.kernels.ops import prime_tune_cache, serve_tune_shapes
+        tuned = prime_tune_cache(serve_tune_shapes(
+            cfg, num_blocks=serve.resolved_num_blocks,
+            block_size=serve.block_size,
+            max_blocks_per_seq=serve.max_blocks_per_seq))
+        hits = sum(1 for d in tuned.values() if d is not None)
+        print(f"[serve] kernel tune cache primed: {hits}/{len(tuned)} "
+              f"shape(s) fit VMEM", flush=True)
+
     sched = BatchScheduler(serve, EngineHooks.for_model(params, cfg, serve))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
+    reqs = []
     for i in range(args.requests):
-        sched.submit(Request(
+        reqs.append(Request(
             uid=i,
             prompt=rng.integers(0, cfg.vocab_size,
                                 size=(args.prompt_len,)).astype(np.int32),
             max_new_tokens=args.max_new))
-    finished = sched.run_until_drained()
+        sched.submit(reqs[-1])
+    trace_dir = None
+    if args.profile > 0:
+        trace_dir = tempfile.mkdtemp(prefix="repro-trace-serve-")
+        jax.profiler.start_trace(trace_dir)
+        try:
+            for _ in range(args.profile):
+                if sched.step() == 0 and not sched.pending:
+                    break
+        finally:
+            jax.profiler.stop_trace()
+    sched.run_until_drained()
+    finished = [r for r in reqs if r.done]
     dt = time.time() - t0
     tok = sum(len(r.generated) for r in finished)
     extra = ""
@@ -86,6 +124,9 @@ def main(argv=None):
           f"{extra})", flush=True)
     for r in finished[:3]:
         print(f"  req {r.uid}: {r.generated[:8]}...", flush=True)
+    if trace_dir:
+        print(f"[serve] profiler trace ({args.profile} tick(s)): {trace_dir}",
+              flush=True)
     return finished
 
 

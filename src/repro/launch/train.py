@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import tempfile
 import time
 
 import jax
@@ -153,6 +154,9 @@ def main(argv=None):
                     help="microbatches per step for the pipeline schedule")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--deadline-s", type=float, default=5.0)
+    ap.add_argument("--profile", type=int, default=0, metavar="N",
+                    help="capture a jax.profiler trace of the first N steps "
+                         "(trace directory printed at exit)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -227,6 +231,17 @@ def main(argv=None):
         print(f"[train] transport autotuner (g={n_data}): {picks}",
               flush=True)
 
+    # prime the kernel tune cache for this run's matmul shapes, same
+    # rationale as the transport cache: the traced step consults stable
+    # decisions, and entries restored from the checkpoint above are cache
+    # hits (kept with their restored: provenance, never re-derived)
+    from repro.kernels.ops import prime_tune_cache, train_tune_shapes
+    tuned = prime_tune_cache(train_tune_shapes(cfg, args.global_batch,
+                                               args.seq_len))
+    hits = sum(1 for d in tuned.values() if d is not None)
+    print(f"[train] kernel tune cache primed: {hits}/{len(tuned)} shape(s) "
+          f"fit VMEM", flush=True)
+
     ckpt = (AsyncCheckpointer(args.ckpt_dir,
                               fault=plan.ckpt_fault if plan else None)
             if args.ckpt_dir else None)
@@ -260,10 +275,16 @@ def main(argv=None):
             plan.corrupt_checkpoint(args.ckpt_dir, next_step)
 
     losses = []
+    trace_dir, tracing = None, False
+    if args.profile > 0:
+        trace_dir = tempfile.mkdtemp(prefix="repro-trace-train-")
     t0 = time.time()
     try:
         with jax.set_mesh(mesh), activation_sharding_ctx(rules):
             for step in range(start_step, args.steps):
+                if trace_dir and step == start_step:
+                    jax.profiler.start_trace(trace_dir)
+                    tracing = True
                 if plan is not None:
                     plan.check_crash(step)
                 batch = {k: jnp.asarray(v)
@@ -287,6 +308,9 @@ def main(argv=None):
                 params, opt_state, metrics = step_fn(params, opt_state, batch,
                                                      hyper, bits, rng)
                 losses.append(float(metrics["loss"]))
+                if tracing and step - start_step + 1 >= args.profile:
+                    jax.profiler.stop_trace()
+                    tracing = False
                 if step % args.log_every == 0 or step == args.steps - 1:
                     dt = time.time() - t0
                     print(f"step {step:5d} loss {losses[-1]:.4f} "
@@ -306,9 +330,14 @@ def main(argv=None):
         # close() flushes the final in-flight write and surfaces any
         # background error even when the loop raises; only an injected
         # crash (os._exit) skips it — by design
+        if tracing:
+            jax.profiler.stop_trace()
         if ckpt:
             ckpt.close()
         loader.close()
+    if trace_dir:
+        print(f"[train] profiler trace ({args.profile} step(s)): {trace_dir}",
+              flush=True)
     print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({np.mean(losses[:5]):.3f} -> {np.mean(losses[-5:]):.3f} smoothed)",
           flush=True)

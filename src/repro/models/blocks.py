@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.api import constrain
+from repro.kernels import decode_prologue as DP
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models.config import ModelConfig
@@ -80,10 +81,19 @@ def init_block_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def transformer_block_decode(params, x: Array, cfg: ModelConfig, cache, pos):
-    h = L.apply_norm(params["attn_norm"], x, cfg)
     if cfg.use_mla:
+        h = L.apply_norm(params["attn_norm"], x, cfg)
         attn_out, cache = L.mla_decode(params["attn"], h, cfg, cache, pos)
+    elif DP.prologue_active(cfg, x):
+        # §Kernels: fused RMSNorm+QKV+rope prologue — one HBM round-trip
+        # for the whole decode prologue, then the shared attention tail
+        q, k, v = DP.decode_prologue(
+            params["attn_norm"], params["attn"], x, cfg,
+            jnp.full((x.shape[0],), pos))
+        attn_out, cache = L.attention_decode_tail(
+            params["attn"], q, k, v, x.dtype, cfg, cache, pos)
     else:
+        h = L.apply_norm(params["attn_norm"], x, cfg)
         attn_out, cache = L.attention_decode(params["attn"], h, cfg, cache, pos)
     x = x + attn_out
     h = L.apply_norm(params["mlp_norm"], x, cfg)

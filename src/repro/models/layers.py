@@ -371,9 +371,18 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
 def attention_decode(params, x: Array, cfg: ModelConfig, cache: dict,
                      pos: Array) -> tuple[Array, dict]:
     """One-token decode. x: [B, 1, D]; pos: scalar int32 (current position)."""
-    dt = x.dtype
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, jnp.full((b, 1), pos))
+    return attention_decode_tail(params, q, k, v, x.dtype, cfg, cache, pos)
+
+
+def attention_decode_tail(params, q: Array, k: Array, v: Array, dt,
+                          cfg: ModelConfig, cache: dict, pos: Array
+                          ) -> tuple[Array, dict]:
+    """Cache write + ring-masked softmax + output projection — everything
+    after the prologue, shared by the unfused path above and the fused
+    decode-prologue kernel (kernels.decode_prologue) so both prologues feed
+    bit-identical attention math."""
     length = cache["k"].shape[1]
     slot = jnp.mod(pos, length)  # ring buffer when SWA; plain index otherwise
     ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),

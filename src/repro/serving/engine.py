@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.api import constrain
+from repro.kernels import decode_prologue as DP
 from repro.kernels.ops import kernel_backend_ctx
 from repro.models import blocks as B
 from repro.models import layers as L
@@ -315,8 +316,17 @@ def _paged_attention(params, h: Array, cfg: ModelConfig, pool_l: dict,
     gathered blocks with kpos <= qpos masking — op-for-op the same math as
     ``layers.attention_decode``, so paged == contiguous bitwise (tested).
     """
-    dt = h.dtype
     q, k, v = L._project_qkv(params, h, cfg, qpos)
+    return _paged_attention_tail(params, q, k, v, h.dtype, cfg, pool_l,
+                                 tables, qpos, attn_impl)
+
+
+def _paged_attention_tail(params, q: Array, k: Array, v: Array, dt,
+                          cfg: ModelConfig, pool_l: dict, tables: Array,
+                          qpos: Array, attn_impl):
+    """Pool write + gather/kernel attention + output projection — everything
+    after the prologue, shared by the unfused path above and the fused
+    decode-prologue kernel (kernels.decode_prologue)."""
     pool_l = _pool_update(pool_l, k, v, tables, qpos)
     groups = q.shape[2] // cfg.num_kv_heads
     scale = cfg.head_dim ** -0.5
@@ -340,10 +350,19 @@ def _paged_attention(params, h: Array, cfg: ModelConfig, pool_l: dict,
 
 
 def _paged_block(p, x: Array, cfg: ModelConfig, pool_l: dict, tables: Array,
-                 qpos: Array, attn_impl):
-    h = L.apply_norm(p["attn_norm"], x, cfg)
-    attn_out, pool_l = _paged_attention(p["attn"], h, cfg, pool_l, tables,
-                                        qpos, attn_impl)
+                 qpos: Array, attn_impl, prologue: bool = False):
+    if prologue and DP.prologue_active(cfg, x):
+        # §Kernels: fused RMSNorm+QKV+rope prologue in front of the paged
+        # pool write + paged-attention kernel (one HBM round-trip)
+        q, k, v = DP.decode_prologue(p["attn_norm"], p["attn"], x, cfg,
+                                     qpos[:, 0])
+        attn_out, pool_l = _paged_attention_tail(
+            p["attn"], q, k, v, x.dtype, cfg, pool_l, tables, qpos,
+            attn_impl)
+    else:
+        h = L.apply_norm(p["attn_norm"], x, cfg)
+        attn_out, pool_l = _paged_attention(p["attn"], h, cfg, pool_l,
+                                            tables, qpos, attn_impl)
     x = x + attn_out
     h = L.apply_norm(p["mlp_norm"], x, cfg)
     if cfg.family == "moe":
@@ -379,7 +398,8 @@ def paged_decode_step(params, cfg: ModelConfig, pool: dict, tables: Array,
 
     def body(h, xs):
         p, pl_ = xs
-        h2, pl2 = _paged_block(p, h, cfg, pl_, tables, qpos, attn_impl)
+        h2, pl2 = _paged_block(p, h, cfg, pl_, tables, qpos, attn_impl,
+                               prologue=True)
         return h2, pl2
     x, new_pool = xscan(body, x, (params["blocks"], pool))
     x = L.apply_norm(params["final_norm"], x, cfg)

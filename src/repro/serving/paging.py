@@ -97,7 +97,13 @@ class PrefixIndex:
     """Prompt-prefix hash -> (n_tokens, block ids), holding one reference
     per block per entry.  ``drop(pool)`` releases everything — after all
     requests complete AND the index is dropped, every non-null refcount is
-    zero (tested)."""
+    zero (tested).
+
+    Entries are LRU-ordered: dict insertion order doubles as recency
+    (``lookup`` hits move the entry to the MRU end), so ``evict_lru`` can
+    release individual cold entries until a block deficit is covered —
+    the admission gate's alternative to dropping the whole index.  The
+    order survives snapshot/restore (both walk insertion order)."""
 
     def __init__(self):
         self._entries: Dict[bytes, Tuple[int, Tuple[int, ...]]] = {}
@@ -140,10 +146,31 @@ class PrefixIndex:
         lengths = sorted({n for n, _ in self._entries.values()
                           if n <= limit}, reverse=True)
         for n in lengths:
-            hit = self._entries.get(self.key(prompt[:n]))
+            k = self.key(prompt[:n])
+            hit = self._entries.get(k)
             if hit is not None:
+                self._touch(k)
                 return hit
         return 0, ()
+
+    def _touch(self, k: bytes):
+        """Move an entry to the MRU end (dict insertion order is recency)."""
+        self._entries[k] = self._entries.pop(k)
+        self._tokens[k] = self._tokens.pop(k)
+
+    def evict_lru(self, pool: BlockPool, need_free: int) -> int:
+        """Release least-recently-used entries until at least ``need_free``
+        blocks came back to the pool's free list (or the index is empty).
+        Returns the number of blocks actually freed — less than the entry's
+        block count when running requests still reference its blocks."""
+        before = pool.available()
+        while self._entries and pool.available() - before < need_free:
+            k = next(iter(self._entries))
+            _, blocks = self._entries.pop(k)
+            del self._tokens[k]
+            for bid in blocks:
+                pool.release(bid)
+        return pool.available() - before
 
     def drop(self, pool: BlockPool):
         for _, blocks in self._entries.values():

@@ -30,6 +30,7 @@ IDENTICAL outputs, even mid-chunked-prefill.
 from __future__ import annotations
 
 import dataclasses
+import json
 import warnings
 from collections import deque
 from functools import partial
@@ -43,6 +44,7 @@ from repro.serving.paging import (BlockPool, PoolExhausted, PrefixIndex,
                                   blocks_for)
 
 _CACHE_DTYPES = ("bfloat16", "float32", "int8")
+_KERNEL_BACKENDS = ("auto", "off", "emulate", "int8")
 
 
 @dataclasses.dataclass
@@ -73,6 +75,10 @@ class ServeConfig:
     prefix_sharing: bool = True
     admission: str = "fifo"              # "fifo" | "priority"
     attn_impl: Optional[str] = None      # None/"ref" | "kernel" (paged decode)
+    kernel_backend: Optional[str] = None  # None | "auto"/"off"/"emulate"/
+    #   "int8": backend installed around the DECODE hooks only, enabling the
+    #   fused decode-prologue kernel (prefill stays unfused so prefix-shared
+    #   block bytes are chunk-invariant)
 
     def __post_init__(self):
         if self.eos_id == -1:
@@ -89,6 +95,10 @@ class ServeConfig:
         if self.cache_dtype not in _CACHE_DTYPES:
             raise ValueError(f"cache_dtype must be one of {_CACHE_DTYPES}, "
                              f"got {self.cache_dtype!r}")
+        if self.kernel_backend is not None \
+                and self.kernel_backend not in _KERNEL_BACKENDS:
+            raise ValueError(f"kernel_backend must be None or one of "
+                             f"{_KERNEL_BACKENDS}, got {self.kernel_backend!r}")
         if self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if self.mode == "paged":
@@ -150,16 +160,32 @@ class EngineHooks:
 
     @classmethod
     def for_model(cls, params, cfg, serve: ServeConfig) -> "EngineHooks":
-        """Build jitted closures over (params, cfg) for either mode."""
+        """Build jitted closures over (params, cfg) for either mode.
+
+        ``serve.kernel_backend`` installs a kernel backend around the
+        DECODE hook only (trace- and call-time), turning on the fused
+        decode-prologue kernel; prefill is left unfused so prefix-shared
+        block bytes stay identical regardless of chunking."""
+        from repro.kernels import ops as kops
         from repro.serving import engine as E
+
+        def _decode_backend(fn):
+            if serve.kernel_backend is None:
+                return fn
+
+            def wrapped(*args):
+                with kops.kernel_backend_ctx(serve.kernel_backend):
+                    return fn(*args)
+            return wrapped
+
         dtype = serve.jnp_cache_dtype()
         if serve.mode == "paged":
             pool = E.init_paged_state(cfg, serve.resolved_num_blocks,
                                       serve.block_size, dtype)
-            decode = jax.jit(
+            decode = _decode_backend(jax.jit(
                 lambda pool, tables, lens, toks: E.paged_decode_step(
                     params, cfg, pool, tables, lens, toks, serve.attn_impl),
-                donate_argnums=(0,))
+                donate_argnums=(0,)))
             chunk = jax.jit(
                 lambda pool, table, toks, start: E.paged_prefill_chunk(
                     params, cfg, pool, table, toks, start),
@@ -178,9 +204,9 @@ class EngineHooks:
                                      {"tokens": jnp.asarray(tokens)},
                                      serve.max_len, dtype))
 
-        decode = jax.jit(
+        decode = _decode_backend(jax.jit(
             lambda state, toks: E.decode_step(params, cfg, state, toks),
-            donate_argnums=(0,))
+            donate_argnums=(0,)))
 
         @partial(jax.jit, donate_argnums=(0,))
         def merge(state, slot_state, i):
@@ -239,7 +265,8 @@ class BatchScheduler:
         self.steps_run = 0
         self.tick_log: List[dict] = []
         self.stats = {"prefix_hits": 0, "reused_tokens": 0, "cow_copies": 0,
-                      "prefill_tokens": 0}
+                      "prefill_tokens": 0, "prefix_evictions": 0,
+                      "evicted_blocks": 0}
         if config.mode == "paged":
             if hooks.decode is None or hooks.prefill_chunk is None \
                     or hooks.copy_block is None:
@@ -365,6 +392,19 @@ class BatchScheduler:
             # final block can each need one COW copy beyond the count
             need = (blocks_for(p + req.max_new_tokens, bs)
                     - len(reuse_blocks) + 2)
+            deficit = (need - self.block_pool.available()
+                       + self._committed_blocks())
+            if deficit > 0 and self.prefix is not None and len(self.prefix):
+                freed = self.prefix.evict_lru(self.block_pool, deficit)
+                if freed:
+                    self.stats["prefix_evictions"] += 1
+                    self.stats["evicted_blocks"] += freed
+                    # eviction may have dropped the entry this request
+                    # planned to reuse — re-resolve against the survivors
+                    reuse_n, reuse_blocks = self.prefix.lookup(req.prompt,
+                                                               p - 1)
+                    need = (blocks_for(p + req.max_new_tokens, bs)
+                            - len(reuse_blocks) + 2)
             if self.block_pool.available() - self._committed_blocks() < need:
                 break  # head-of-line: wait for running requests to free
             self.pending.remove(req)
@@ -483,9 +523,9 @@ class BatchScheduler:
                 and all(r is None for r in self.slots):
             raise PoolExhausted(
                 "admission deadlock: pending requests cannot fit the block "
-                "pool and no running request can free blocks — size "
-                "num_blocks for num_slots * max_len, or drop the prefix "
-                "index (release_prefix_cache())")
+                "pool even after LRU prefix eviction, and no running "
+                "request can free blocks — size num_blocks for "
+                "num_slots * max_len")
         return n + prefilling
 
     def release_prefix_cache(self):
@@ -557,7 +597,16 @@ class BatchScheduler:
             "prefill_chunk": int(c.chunk_tokens),
             "prefix_sharing": int(c.prefix_sharing),
             "admission_priority": int(c.admission == "priority"),
+            # 0 = unset, else 1 + index into _KERNEL_BACKENDS (ints only:
+            # string leaves break the checkpoint layer's jax tree mapping)
+            "kernel_backend": (0 if c.kernel_backend is None else
+                               1 + _KERNEL_BACKENDS.index(c.kernel_backend)),
         }
+        from repro.kernels import ops as kops
+        # tune-cache decisions carry None/str values, which jax pytree
+        # flattening would drop/mangle — ride as JSON bytes instead
+        base["tune_cache"] = np.frombuffer(
+            json.dumps(kops.tune_cache_snapshot()).encode(), np.uint8).copy()
         base["pool"] = jax.tree.map(np.asarray, self.pool)
         base["block_pool"] = self.block_pool.snapshot()
         base["prefix"] = (self.prefix.snapshot() if self.prefix is not None
@@ -581,6 +630,8 @@ class BatchScheduler:
                 raise ValueError("restoring a paged snapshot requires "
                                  "hooks=EngineHooks(...)")
             s = snap["serve"]
+            kbi = int(s.get("kernel_backend", 0))  # 0 on pre-PR-9 snapshots
+            kb = None if kbi == 0 else _KERNEL_BACKENDS[kbi - 1]
             config = ServeConfig(
                 num_slots=int(snap["num_slots"]), eos_id=eos, mode="paged",
                 max_len=int(s["max_len"]), block_size=int(s["block_size"]),
@@ -589,7 +640,16 @@ class BatchScheduler:
                 cache_dtype=str(np.asarray(snap["pool"]["k"]).dtype),
                 prefix_sharing=bool(int(s["prefix_sharing"])),
                 admission=("priority" if int(s["admission_priority"])
-                           else "fifo"))
+                           else "fifo"),
+                kernel_backend=kb)
+            tc = snap.get("tune_cache")
+            if tc is not None and np.asarray(tc).size:
+                from repro.kernels import ops as kops
+                n = kops.load_tune_cache(json.loads(
+                    np.asarray(tc, np.uint8).tobytes().decode()))
+                if n:
+                    print(f"[serve] restored {n} tune-cache decision(s) "
+                          f"from snapshot")
             hooks = dataclasses.replace(
                 hooks, init_state=jax.tree.map(jnp.asarray, snap["pool"]))
             sched = cls(config, hooks)

@@ -1,0 +1,197 @@
+"""Fused decode-prologue kernel: bitwise parity and serving equivalence.
+
+The load-bearing claims, each a test:
+  * fused ``decode_prologue`` is BITWISE identical to the unfused
+    ``apply_norm`` + ``_project_qkv`` chain under jit, across GQA vs MHA,
+    qkv_bias on/off, and rope theta — f32 datapath.
+  * the Pallas kernel is BITWISE identical to the jitted jnp reference on
+    BOTH datapaths (f32 and int8) — forcing the tune_prologue fallback
+    must not change a single bit.
+  * unsupported geometries (layernorm front, MLA) gate the fusion off.
+  * with the fusion active end-to-end (kernel_backend="emulate"), paged
+    AND contiguous serving emit token streams identical to the unfused
+    runs, across cache_dtype f32/bf16/int8.
+
+Every parity assertion jits BOTH sides: XLA CPU fuses the rope mul-adds
+into FMAs under jit, so an eager chain differs from its jitted twin by
+1 ulp — production decode is always jitted, and that is the contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_prologue as DP
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import BatchScheduler, EngineHooks, Request, ServeConfig
+from test_models import tiny
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tune_cache():
+    kops.clear_tune_cache()
+    yield
+    kops.clear_tune_cache()
+
+
+def _cfg(**kw):
+    base = dict(name="t-prologue", family="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _params(cfg, seed=0):
+    key = jax.random.key(seed)
+    d, h, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.head_dim)
+    ks = jax.random.split(key, 8)
+    norm = {"scale": 1.0 + 0.1 * jax.random.normal(ks[0], (d,), jnp.float32)}
+    attn = {"wq": jax.random.normal(ks[1], (d, h, hd)) * 0.1,
+            "wk": jax.random.normal(ks[2], (d, hkv, hd)) * 0.1,
+            "wv": jax.random.normal(ks[3], (d, hkv, hd)) * 0.1}
+    if cfg.qkv_bias:
+        attn["bq"] = jax.random.normal(ks[4], (h, hd)) * 0.1
+        attn["bk"] = jax.random.normal(ks[5], (hkv, hd)) * 0.1
+        attn["bv"] = jax.random.normal(ks[6], (hkv, hd)) * 0.1
+    x = jax.random.normal(ks[7], (3, 1, d), jnp.float32)
+    pos = jnp.array([0, 5, 17], jnp.int32)
+    return norm, attn, x, pos
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused: bitwise under jit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv,bias,theta", [
+    (2, False, 10_000.0),          # GQA, the common case
+    (4, True, 10_000.0),           # MHA + qkv bias (qwen-style)
+    (2, True, 500_000.0),          # long-context rope theta
+])
+def test_fused_matches_unfused_bitwise(kv, bias, theta):
+    cfg = _cfg(num_kv_heads=kv, qkv_bias=bias, rope_theta=theta)
+    norm, attn, x, pos = _params(cfg)
+
+    fused = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+    unfused = jax.jit(lambda xx: L._project_qkv(
+        attn, L.apply_norm(norm, xx, cfg), cfg, pos[:, None]))
+    for got, want in zip(fused(x), unfused(x)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_matches_unfused_no_rope():
+    cfg = _cfg(use_rope=False)
+    norm, attn, x, pos = _params(cfg)
+    fused = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+    unfused = jax.jit(lambda xx: L._project_qkv(
+        attn, L.apply_norm(norm, xx, cfg), cfg, pos[:, None]))
+    for got, want in zip(fused(x), unfused(x)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs jnp reference: bitwise on both datapaths
+# ---------------------------------------------------------------------------
+
+def _force_ref(monkeypatch):
+    """Reject every shape so decode_prologue takes the jnp fallback."""
+    monkeypatch.setattr(kops, "tune_prologue", lambda *a, **k: None)
+
+
+def test_kernel_matches_ref_bitwise_f32(monkeypatch):
+    cfg = _cfg(qkv_bias=True)
+    norm, attn, x, pos = _params(cfg)
+    assert kops.tune_prologue(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim) is not None
+    kernel = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+    kout = kernel(x)
+    _force_ref(monkeypatch)
+    ref = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+    for got, want in zip(kout, ref(x)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_matches_ref_bitwise_int8(monkeypatch):
+    cfg = _cfg(qkv_bias=True)
+    norm, attn, x, pos = _params(cfg)
+    with kops.kernel_backend_ctx("int8"):
+        kernel = jax.jit(
+            lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+        kout = kernel(x)
+        _force_ref(monkeypatch)
+        ref = jax.jit(lambda xx: DP.decode_prologue(norm, attn, xx, cfg, pos))
+        rout = ref(x)
+    for got, want in zip(kout, rout):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Gating
+# ---------------------------------------------------------------------------
+
+def test_unsupported_geometries_gate_off():
+    assert DP.prologue_supported(_cfg())
+    assert not DP.prologue_supported(_cfg(norm_kind="layernorm"))
+    ssm = tiny("ssm")
+    assert not DP.prologue_supported(ssm)          # no attention heads
+    mla = tiny(use_mla=True, kv_lora_rank=16, qk_nope_dim=8, qk_rope_dim=8,
+               v_head_dim=8)
+    assert not DP.prologue_supported(mla)
+
+
+def test_prologue_inactive_without_backend_and_on_prefill():
+    cfg = _cfg()
+    x1 = jnp.zeros((2, 1, cfg.d_model))
+    x8 = jnp.zeros((2, 8, cfg.d_model))
+    assert not DP.prologue_active(cfg, x1)         # ambient backend is off
+    with kops.kernel_backend_ctx("emulate"):
+        assert DP.prologue_active(cfg, x1)
+        assert not DP.prologue_active(cfg, x8)     # prefill stays unfused
+
+
+def test_layernorm_arch_decodes_through_unfused_path():
+    """A layernorm-front arch under an active backend must fall back to
+    the unfused decode (prologue_active False) and still emit the same
+    stream as the backend-off run."""
+    cfg = tiny(norm_kind="layernorm")
+    assert not DP.prologue_supported(cfg)
+    params = lm.init_params(jax.random.key(0), cfg)
+    toks = _serve_tokens(params, cfg, mode="contiguous",
+                         cache_dtype="float32", kernel_backend="emulate")
+    ref = _serve_tokens(params, cfg, mode="contiguous",
+                        cache_dtype="float32", kernel_backend=None)
+    assert toks == ref
+
+
+# ---------------------------------------------------------------------------
+# End-to-end serving equivalence (fused decode on vs off)
+# ---------------------------------------------------------------------------
+
+def _serve_tokens(params, cfg, *, mode, cache_dtype, kernel_backend):
+    sc = ServeConfig(num_slots=2, eos_id=None, max_len=32, mode=mode,
+                     block_size=8, cache_dtype=cache_dtype,
+                     kernel_backend=kernel_backend)
+    s = BatchScheduler(sc, EngineHooks.for_model(params, cfg, sc))
+    rng = np.random.default_rng(7)
+    for i in range(3):
+        s.submit(Request(uid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=(9,)).astype(np.int32),
+                         max_new_tokens=6))
+    return {r.uid: r.generated for r in s.run_until_drained()}
+
+
+@pytest.mark.parametrize("mode", ["paged", "contiguous"])
+@pytest.mark.parametrize("cache_dtype", ["float32", "bfloat16", "int8"])
+def test_serving_streams_identical_with_fused_decode(mode, cache_dtype):
+    cfg = tiny()
+    params = lm.init_params(jax.random.key(0), cfg)
+    fused = _serve_tokens(params, cfg, mode=mode, cache_dtype=cache_dtype,
+                          kernel_backend="emulate")
+    ref = _serve_tokens(params, cfg, mode=mode, cache_dtype=cache_dtype,
+                        kernel_backend=None)
+    assert fused == ref

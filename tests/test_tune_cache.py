@@ -1,0 +1,190 @@
+"""Persistent kernel tune cache (kernels.ops), modeled on test_transport.
+
+Covers: decision stability through the cache, snapshot/load round-trip
+with ``restored:`` provenance, the no-clobber rule (existing entries win
+unless overwrite), the dump/REPRO_TUNE_CACHE file path, malformed-entry
+tolerance, driver priming (train + serve shape sets), and the replay
+guarantees through checkpoint resume ``extra`` and the paged serve
+snapshot.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.ops import (clear_tune_cache, dump_tune_cache,
+                               load_tune_cache, prime_tune_cache,
+                               serve_tune_shapes, train_tune_shapes,
+                               tune_blocks, tune_cache_snapshot,
+                               tune_prologue)
+from repro.models import lm
+from test_models import tiny
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_tune_cache()
+    yield
+    clear_tune_cache()
+
+
+# ---------------------------------------------------------------------------
+# Decisions are cached and stable
+# ---------------------------------------------------------------------------
+
+def test_decision_is_cached_and_stable():
+    first = tune_blocks(32, 16, 48)
+    assert first == (32, 16, 48)
+    snap = tune_cache_snapshot()
+    assert len(snap) == 1
+    (key, entry), = snap.items()
+    assert key.startswith("kind=blocks,m=32,n=16,k=48")
+    assert entry["source"] == "computed"
+    for _ in range(3):
+        assert tune_blocks(32, 16, 48) == first
+    assert len(tune_cache_snapshot()) == 1
+
+
+def test_negative_decisions_are_cached_too():
+    assert tune_blocks(7, 16, 48) is None          # no aligned divisor of 7
+    assert tune_prologue(30, 4, 2, 30) is None     # misaligned head dim
+    snap = tune_cache_snapshot()
+    assert len(snap) == 2
+    assert all(e["decision"] is None for e in snap.values())
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / load: provenance, no-clobber, overwrite
+# ---------------------------------------------------------------------------
+
+def test_snapshot_load_roundtrip_with_restored_provenance():
+    want = tune_blocks(32, 16, 48)
+    pro = tune_prologue(64, 4, 2, 16)
+    snap = tune_cache_snapshot()
+    clear_tune_cache()
+    assert tune_cache_snapshot() == {}
+    assert load_tune_cache(snap) == len(snap)
+    # restored decisions replay identically and carry provenance
+    assert tune_blocks(32, 16, 48) == want
+    assert tune_prologue(64, 4, 2, 16) == pro
+    after = tune_cache_snapshot()
+    assert after.keys() == snap.keys()
+    assert all(e["source"] == "restored:computed" for e in after.values())
+
+
+def test_load_does_not_clobber_unless_overwrite():
+    tune_blocks(32, 16, 48)
+    snap = tune_cache_snapshot()
+    (key, entry), = snap.items()
+    fake = {key: {"decision": [8, 8, 8], "source": "computed"}}
+    assert load_tune_cache(fake) == 0              # existing entry wins
+    assert tune_blocks(32, 16, 48) == (32, 16, 48)
+    assert load_tune_cache(fake, overwrite=True) == 1
+    assert tune_blocks(32, 16, 48) == (8, 8, 8)
+
+
+def test_malformed_entries_are_skipped():
+    good = {"kind=blocks,m=32,n=16,k=48,item=4,acc=4,db=True":
+            {"decision": [32, 16, 48], "source": "computed"}}
+    bad = {"not-a-key": {"decision": 1, "source": "x"},
+           "kind=unknown,z=1": {"decision": 1, "source": "x"},
+           "kind=blocks,m=oops,n=16,k=48,item=4,acc=4,db=True":
+           {"decision": [8], "source": "x"}}
+    assert load_tune_cache({**bad, **good}) == 1
+    assert tune_blocks(32, 16, 48) == (32, 16, 48)
+
+
+# ---------------------------------------------------------------------------
+# Dump / REPRO_TUNE_CACHE preload
+# ---------------------------------------------------------------------------
+
+def test_dump_and_env_preload(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    # write a dump whose decision DIFFERS from what the tuner would derive,
+    # so a cache hit is observable
+    tune_blocks(32, 16, 48)
+    snap = tune_cache_snapshot()
+    (key, _), = snap.items()
+    dump_tune_cache(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == snap
+    on_disk[key]["decision"] = [8, 8, 8]
+    path.write_text(json.dumps(on_disk))
+
+    clear_tune_cache()
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    monkeypatch.setattr(kops, "_TUNE_ENV_LOADED", False)
+    assert tune_blocks(32, 16, 48) == (8, 8, 8)    # env decision, not derived
+    (key2, entry), = tune_cache_snapshot().items()
+    assert key2 == key and entry["source"] == "restored:computed"
+
+
+# ---------------------------------------------------------------------------
+# Driver priming
+# ---------------------------------------------------------------------------
+
+def test_prime_train_and_serve_shapes():
+    cfg = tiny()
+    primed = prime_tune_cache(train_tune_shapes(cfg, 8, 64))
+    assert primed and all(k.startswith("kind=") for k in primed)
+    primed_s = prime_tune_cache(serve_tune_shapes(
+        cfg, num_blocks=17, block_size=8, max_blocks_per_seq=4))
+    assert any(k.startswith("kind=paged") for k in primed_s)
+    assert any(k.startswith("kind=prologue") for k in primed_s)
+    # priming again is pure cache hits: snapshot unchanged
+    before = tune_cache_snapshot()
+    prime_tune_cache(train_tune_shapes(cfg, 8, 64))
+    assert tune_cache_snapshot() == before
+
+
+# ---------------------------------------------------------------------------
+# Replay through checkpoint resume extra and the serve snapshot
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_extra_replays_tune_decisions(capsys):
+    from repro.core.steps import apply_resume_extra, capture_resume_extra
+    cfg = tiny()
+    want = tune_blocks(32, 16, 48)
+    extra = capture_resume_extra(cfg, 5)
+    assert extra["tune_cache"]
+    clear_tune_cache()
+    assert apply_resume_extra(extra, cfg, 5) == 5
+    assert "restored 1 tune-cache decision(s)" in capsys.readouterr().out
+    assert tune_blocks(32, 16, 48) == want
+    snap = tune_cache_snapshot()
+    assert all(e["source"] == "restored:computed" for e in snap.values())
+
+
+def test_serve_snapshot_replays_tune_decisions():
+    from repro.serving import (BatchScheduler, EngineHooks, Request,
+                               ServeConfig)
+    cfg = tiny()
+    params = lm.init_params(jax.random.key(0), cfg)
+    sc = ServeConfig(num_slots=2, eos_id=None, max_len=32, mode="paged",
+                     block_size=8, cache_dtype="float32",
+                     kernel_backend="emulate")
+    hooks = EngineHooks.for_model(params, cfg, sc)
+    s = BatchScheduler(sc, hooks)
+    rng = np.random.default_rng(3)
+    s.submit(Request(uid=0,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=(9,)).astype(np.int32),
+                     max_new_tokens=4))
+    for _ in range(3):
+        s.step()
+    snap = s.snapshot()
+    assert np.asarray(snap["tune_cache"]).size    # decisions rode along
+    primed = tune_cache_snapshot()
+    assert primed                                  # the fused decode tuned
+
+    clear_tune_cache()
+    restored = BatchScheduler.restore(snap, hooks=hooks)
+    assert restored.config.kernel_backend == "emulate"
+    after = tune_cache_snapshot()
+    assert after.keys() == primed.keys()
+    assert all(e["source"].startswith("restored:") for e in after.values())
+    # the decisions themselves replay bit-for-bit
+    assert {k: e["decision"] for k, e in after.items()} \
+        == {k: e["decision"] for k, e in primed.items()}

@@ -1,0 +1,66 @@
+"""ROADMAP item 4: per-layer (I,F) bitwidth as a searchable dimension.
+
+Runs the sensitivity sweep (repro.search.sensitivity) on the paper's
+LeNet-class workload: per-layer-group probes over the candidate grid,
+greedy minimal-format selection against a loss-delta target, then the
+train->serve int8 conformance checks on the selected plan.
+
+Row conventions (BENCH_bitwidth.json, gated by check_regression.py):
+  * ``bitwidth/sweep_lenet`` carries the timed cost (us per probe) plus
+    the selection outcome — the regression gate watches the timing.
+  * ``bitwidth/group*`` and ``bitwidth/export_parity`` are decision rows
+    (us_per_call 0.0, skipped by the gate) recording WHAT was chosen and
+    whether parity held, so plan drift shows up in the JSON diff.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run(quick: bool = False):
+    from repro.search import export as bit_export
+    from repro.search.sensitivity import SweepConfig, run_sweep
+
+    sweep = SweepConfig(num_groups=2, probe_steps=60 if quick else 120,
+                        target=0.08, seed=0)
+    t0 = time.time()
+    plan = run_sweep(sweep)
+    dt_us = (time.time() - t0) * 1e6
+
+    rows = [{
+        "name": "bitwidth/sweep_lenet",
+        "us_per_call": dt_us / max(plan.probes, 1),
+        "probes": plan.probes,
+        "groups": len(plan.groups),
+        "probe_steps": plan.probe_steps,
+        "baseline_loss": plan.baseline_loss,
+        "final_loss": plan.final_loss,
+        "loss_delta": plan.final_loss - plan.baseline_loss,
+        "target": plan.target,
+        "met_target": int(plan.met_target),
+    }]
+    for g in plan.groups:
+        rows.append({
+            "name": f"bitwidth/group{g.group}",
+            "us_per_call": 0.0,  # decision row: gate skips it
+            "layers": len(g.layers),
+            "i_bits": g.i_bits,
+            "f_bits": g.f_bits,
+            "bitwidth": g.bitwidth,
+            "probe_loss": g.probe_loss,
+            "met_target": int(g.met_target),
+        })
+
+    parity = bit_export.verify_train_serve_parity(plan)
+    rows.append({
+        "name": "bitwidth/export_parity",
+        "us_per_call": 0.0,  # decision row: gate skips it
+        "ok": int(parity["ok"]),
+        "grid_ok": int(parity["grid_ok"]),
+        "kv_ok": int(parity["kv_ok"]),
+        "prologue_ok": int(parity["prologue_ok"]),
+        "grid_msb_max_diff": parity["grid_msb_max_diff"],
+        "kv_scale_max_diff": parity["kv_scale_max_diff"],
+        "prologue_max_diff": parity["prologue_max_diff"],
+    })
+    return rows

@@ -15,7 +15,7 @@ Two row families:
                                   prologue vs the unfused op chain
 
 The run also dumps the autotuner's decision cache to
-``tune_cache.fresh.json`` (CI uploads it next to
+``artifacts/tune_cache.fresh.json`` (CI uploads it next to
 ``transport_cache.fresh.json``; REPRO_TUNE_CACHE preloads it elsewhere).
 """
 from __future__ import annotations
@@ -176,5 +176,5 @@ def run(quick: bool = False):
     }]
     rows += _config_sweep(quick)
     rows.append(_prologue_row())
-    dump_tune_cache("tune_cache.fresh.json")
+    dump_tune_cache("artifacts/tune_cache.fresh.json")
     return rows

@@ -28,7 +28,7 @@ dist.async_collectives):
     (plus the 4MB probe) and emits one non-timing row per size bucket
     with the measured ring/psum/scatter composite microseconds (reduce +
     optimizer-update tail) and which transport won.  The cache itself is
-    dumped to ``transport_cache.fresh.json`` for the CI artifact.
+    dumped to ``artifacts/transport_cache.fresh.json`` for the CI artifact.
 
 The step rows run with the policy defaults — ``dw_transport="auto"``
 (primed, so the decisions are measured, not modeled) — so ``speedup``
@@ -225,5 +225,5 @@ def run(quick: bool = False):
                 "us_per_call": _time(g, (x,), 5 * reps),
                 "n_devices": n_dev,
             })
-        dump_transport_cache("transport_cache.fresh.json")
+        dump_transport_cache("artifacts/transport_cache.fresh.json")
     return rows

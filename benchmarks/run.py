@@ -23,11 +23,14 @@ via ``benchmarks/check_regression.py``, and uploads both as artifacts.
   serving     — (beyond paper)    (paged+chunked+prefix-shared continuous
                                    batching vs contiguous slots; int8 vs
                                    bf16 KV; tokens/sec and p50/p99)
+  bitwidth    — ROADMAP item 4    (per-layer (I,F) sensitivity sweep +
+                                   train->serve int8 export parity)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -36,14 +39,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+    ap.add_argument("--json", nargs="?",
+                    const="artifacts/BENCH_kernels.fresh.json",
                     default=None, metavar="PATH",
                     help="write results as a JSON list (default "
-                         "BENCH_kernels.json)")
+                         "artifacts/BENCH_kernels.fresh.json; pass an "
+                         "explicit path to regenerate a committed baseline)")
     args = ap.parse_args()
 
-    from benchmarks import (ckpt_bench, convergence, kernels_bench, overhead,
-                            overlap, pipeline, roofline, savings,
+    from benchmarks import (bitwidth, ckpt_bench, convergence, kernels_bench,
+                            overhead, overlap, pipeline, roofline, savings,
                             serving_bench)
     suites = {
         "convergence": convergence.run,
@@ -55,6 +60,7 @@ def main() -> None:
         "roofline": roofline.run,
         "ckpt": ckpt_bench.run,
         "serving": serving_bench.run,
+        "bitwidth": bitwidth.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}
@@ -77,6 +83,9 @@ def main() -> None:
             print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
             results.append({"suite": name, **r})
     if args.json:
+        parent = os.path.dirname(args.json)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} rows to {args.json}", flush=True)

@@ -89,7 +89,8 @@ RESUME_SCHEMA = 1
 
 
 def capture_resume_extra(cfg: ModelConfig, step: int, *, loader=None,
-                         user_extra: Optional[dict] = None) -> dict:
+                         user_extra: Optional[dict] = None,
+                         anneal=None) -> dict:
     """The checkpoint ``extra`` payload that makes a restart BITWISE.
 
     (params, opt_state) alone under-specify a resumed step: the restarted
@@ -114,6 +115,12 @@ def capture_resume_extra(cfg: ModelConfig, step: int, *, loader=None,
         "transport_cache": transport_cache_snapshot(),
         "tune_cache": tune_cache_snapshot(),
     }
+    if anneal is not None:
+        # record the bit-anneal spec: the annealed bits are a pure function
+        # of the step, so resume is bitwise automatically — the spec rides
+        # along only to GUARD against resuming under a different ramp
+        from repro.search.anneal import AnnealSchedule
+        extra["bit_anneal"] = AnnealSchedule.parse(anneal).spec
     if loader is not None:
         extra["loader"] = {"served": int(loader.served),
                            "skips": int(loader.skips),
@@ -125,7 +132,7 @@ def capture_resume_extra(cfg: ModelConfig, step: int, *, loader=None,
 
 
 def apply_resume_extra(extra: dict, cfg: ModelConfig,
-                       ckpt_step: int) -> int:
+                       ckpt_step: int, *, anneal=None) -> int:
     """Validate + install a checkpoint's resume payload.
 
     Rejects a checkpoint written by a different arch (restoring qwen state
@@ -140,6 +147,22 @@ def apply_resume_extra(extra: dict, cfg: ModelConfig,
         raise ValueError(
             f"checkpoint was written by arch {arch!r}; refusing to resume "
             f"it as {cfg.name!r}")
+    ckpt_anneal = extra.get("bit_anneal")
+    cur_anneal = None
+    if anneal is not None:
+        from repro.search.anneal import AnnealSchedule
+        cur_anneal = AnnealSchedule.parse(anneal).spec
+    if ckpt_anneal is not None and cur_anneal is not None \
+            and ckpt_anneal != cur_anneal:
+        raise ValueError(
+            f"checkpoint was annealed under {ckpt_anneal!r}; resuming with "
+            f"{cur_anneal!r} would change the bit ramp mid-run (pass the "
+            f"same --bit-anneal spec to resume)")
+    if (ckpt_anneal is None) != (cur_anneal is None):
+        warnings.warn(
+            f"bit-anneal mismatch at resume: checkpoint={ckpt_anneal!r} "
+            f"current={cur_anneal!r} — the effective bit schedule changes "
+            f"at the restart boundary", RuntimeWarning, stacklevel=2)
     cache = extra.get("transport_cache")
     if cache:
         from repro.dist.async_collectives import load_transport_cache
@@ -520,11 +543,22 @@ class StepOptions:
     num_microbatches: Optional[int] = None
     overlap: Optional[str] = None
     transport: Optional[str] = None
+    bit_anneal: Any = None  # spec str | AnnealSchedule | None
 
     def __post_init__(self):
         if self.engine not in ("taxonn", "autodiff"):
             raise ValueError(f"engine must be 'taxonn' or 'autodiff', "
                              f"got {self.engine!r}")
+        if isinstance(self.bit_anneal, str):
+            from repro.search.anneal import AnnealSchedule
+            object.__setattr__(self, "bit_anneal",
+                               AnnealSchedule.parse(self.bit_anneal))
+        elif self.bit_anneal is not None:
+            from repro.search.anneal import AnnealSchedule
+            if not isinstance(self.bit_anneal, AnnealSchedule):
+                raise ValueError(
+                    f"bit_anneal must be an anneal spec string or an "
+                    f"AnnealSchedule, got {type(self.bit_anneal).__name__}")
         if self.kernel_backend not in (None, "off", "emulate", "int8", "auto"):
             raise ValueError(f"kernel_backend must be 'off', 'emulate', "
                              f"'int8' or 'auto', got {self.kernel_backend!r}")
@@ -543,7 +577,8 @@ class StepOptions:
         variants."""
         base = dict(kernel_backend=policy.kernel_backend,
                     overlap=policy.overlap,
-                    transport=policy.dw_transport)
+                    transport=policy.dw_transport,
+                    bit_anneal=getattr(policy, "bit_anneal", None))
         base.update(overrides)
         return cls(**base)
 
@@ -640,6 +675,12 @@ def _make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy],
     sched, pipe_metrics = _pipeline_metrics(
         options.pipeline_schedule, options.pipeline_stages,
         options.num_microbatches)
+    anneal = options.bit_anneal
+    if anneal is None:
+        pol_spec = getattr(policy, "bit_anneal", None)
+        if pol_spec:
+            from repro.search.anneal import AnnealSchedule
+            anneal = AnnealSchedule.parse(pol_spec)
 
     if engine == "autodiff":
         def auto_step(params, opt_state, batch, hyper: Hyper, bits=None,
@@ -657,6 +698,7 @@ def _make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy],
             metrics.update(pipe_metrics)
             return new_params, new_opt, metrics
         auto_step.pipeline_schedule = sched
+        auto_step.bit_anneal = anneal  # accepted for parity; bits unused
         return auto_step
 
     if engine != "taxonn":
@@ -677,6 +719,11 @@ def _make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy],
             rng = jnp.asarray(rng)
             if not jnp.issubdtype(rng.dtype, jax.dtypes.prng_key):
                 rng = jax.random.wrap_key_data(rng)
+        if anneal is not None:
+            # step-indexed F-bit ramp: bits stay traced data, so the anneal
+            # composes with the scan, pipeline, overlap and stochastic paths
+            # for free, and resume at step N continues the ramp bitwise
+            bits = anneal.apply_tree(bits, hyper.step)
         main_bits = bits["blocks"]
         bnd_keys = boundary_keys(params)
         bnd = {k: params[k] for k in bnd_keys}
@@ -859,6 +906,7 @@ def _make_train_step(cfg: ModelConfig, policy: Optional[QuantPolicy],
             return _step_impl(params, opt_state, batch, hyper, bits, rng)
 
     step.pipeline_schedule = sched
+    step.bit_anneal = anneal
     return step
 
 

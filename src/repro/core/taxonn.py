@@ -95,6 +95,11 @@ class QuantPolicy:
     # "ring" (chunked ppermute), or "psum" (fused blocking collective at
     # start — one rendezvous per layer — with a free wait).
     dw_transport: str = "auto"
+    # Progressive bitwidth-annealing spec ("0:16,200:12,..." — see
+    # repro.search.anneal.AnnealSchedule).  Consumed by make_train_step:
+    # the effective per-layer F bits become a step-indexed ramp applied on
+    # top of the run's BitSchedule.  None = no anneal.
+    bit_anneal: Optional[str] = None
 
     @staticmethod
     def off() -> "QuantPolicy":

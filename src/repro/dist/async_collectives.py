@@ -289,6 +289,9 @@ def transport_cache_snapshot() -> dict:
 
 def dump_transport_cache(path: str) -> None:
     """Persist the decision cache (the CI bench uploads it for debugging)."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(transport_cache_snapshot(), f, indent=2, sort_keys=True)
 

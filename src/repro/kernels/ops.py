@@ -318,6 +318,9 @@ def dump_tune_cache(path: str) -> None:
     """Persist the decision cache (the CI bench uploads it next to
     ``transport_cache.fresh.json``; point REPRO_TUNE_CACHE at the file to
     preload a later process)."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(tune_cache_snapshot(), f, indent=2, sort_keys=True)
 

@@ -85,6 +85,27 @@ def main(argv=None):
                     choices=["sgd", "momentum", "momentum8", "adam"])
     ap.add_argument("--quantize", action="store_true",
                     help="enable the TaxoNN per-layer (I,F) schedule")
+    ap.add_argument("--bit-anneal", default=None, metavar="SPEC",
+                    help="progressive bitwidth-annealing schedule, e.g. "
+                         "'0:off,100:16,400:12': comma-separated STEP:VALUE "
+                         "milestones where VALUE is an F-bit floor applied "
+                         "on top of the per-layer schedule ('off' = "
+                         "quantization disabled until the next milestone); "
+                         "bits stay traced data so the ramp costs zero "
+                         "recompiles and resume continues it bitwise (see "
+                         "repro.search.anneal)")
+    ap.add_argument("--bit-search", type=int, default=0, metavar="GROUPS",
+                    help="run a per-layer-group (I,F) sensitivity sweep on "
+                         "this arch before training (GROUPS contiguous "
+                         "layer groups; 0 = off) and train with the "
+                         "selected plan; the BitPlan + its serving int8 "
+                         "export are saved next to the checkpoints (or "
+                         "under artifacts/)")
+    ap.add_argument("--bit-target", type=float, default=0.1,
+                    help="--bit-search loss-delta target vs the f32 "
+                         "baseline probe")
+    ap.add_argument("--bit-probe-steps", type=int, default=24,
+                    help="--bit-search training steps per probe")
     ap.add_argument("--engine", default="taxonn",
                     choices=["taxonn", "autodiff"])
     ap.add_argument("--kernel-backend", default="auto",
@@ -191,8 +212,36 @@ def main(argv=None):
                                  overlap_depth=args.overlap_depth,
                                  dw_transport=args.transport,
                                  stochastic=args.stochastic,
-                                 quantize_updates=args.quantize_updates)
+                                 quantize_updates=args.quantize_updates,
+                                 bit_anneal=args.bit_anneal)
     bits = default_bits(cfg, enabled=args.quantize)
+
+    if args.bit_search:
+        from repro.search import export as bit_export
+        from repro.search.sensitivity import SweepConfig, run_sweep_lm
+        if not args.quantize:
+            print("[train] note: --bit-search without --quantize — the "
+                  "sweep runs quantized probes but training stays fp32",
+                  flush=True)
+        sweep = SweepConfig(num_groups=args.bit_search,
+                            target=args.bit_target,
+                            probe_steps=args.bit_probe_steps,
+                            batch=args.global_batch, lr=args.lr)
+        t_sweep = time.time()
+        bit_plan = run_sweep_lm(cfg, ocfg, sweep, seq_len=args.seq_len,
+                                log=lambda s: print(f"[bit-search] {s}",
+                                                    flush=True))
+        print(f"[train] bit-search ({bit_plan.probes} probes, "
+              f"{time.time() - t_sweep:.1f}s): {bit_plan.describe()}",
+              flush=True)
+        out_dir = args.ckpt_dir or "artifacts"
+        bit_plan.save(f"{out_dir}/bit_plan.json")
+        serve_plan = bit_export.to_serve_plan(bit_plan)
+        bit_export.save_serve_plan(serve_plan, f"{out_dir}/bit_plan_serve.json")
+        parity = bit_export.verify_train_serve_parity(bit_plan)
+        print(f"[train] train<->serve int8 parity: "
+              f"{'OK' if parity['ok'] else 'VIOLATED'} {parity}", flush=True)
+        bits["blocks"] = bit_plan.to_bit_schedule(enabled=args.quantize)
     sched = cosine_schedule(args.lr, warmup=max(10, args.steps // 20),
                             total=args.steps)
 
@@ -213,7 +262,8 @@ def main(argv=None):
         (params, opt_state), ckpt_step, extra = restore_checkpoint(
             args.ckpt_dir, (params, opt_state),
             shardings=(p_sh, None) if args.model > 1 else None)
-        start_step = apply_resume_extra(extra, cfg, ckpt_step)
+        start_step = apply_resume_extra(extra, cfg, ckpt_step,
+                                        anneal=args.bit_anneal)
         print(f"[train] resumed from step {start_step}", flush=True)
 
     if args.overlap == "on" and args.transport == "auto" and n_data > 1:
@@ -259,12 +309,14 @@ def main(argv=None):
                 pipeline_schedule=pipe_sched,
                 pipeline_stages=(pipe_axis_size(mesh) * pipe_sched.num_virtual
                                  if pipe_sched else None),
-                num_microbatches=args.microbatches if pipe_sched else None)),
+                num_microbatches=args.microbatches if pipe_sched else None,
+                bit_anneal=args.bit_anneal)),
         donate_argnums=(0, 1))
 
     def ckpt_extra(next_step):
         return capture_resume_extra(cfg, next_step, loader=loader,
-                                    user_extra={"loss": losses[-1]})
+                                    user_extra={"loss": losses[-1]},
+                                    anneal=args.bit_anneal)
 
     def maybe_flip(next_step):
         # bit-flip drills corrupt a LANDED checkpoint: join the async write

@@ -17,6 +17,7 @@ from repro.quant.fixed_point import (
     BitSchedule,
     make_bit_schedule,
     paper_schedule,
+    schedule_from_formats,
 )
 from repro.quant.compression import (
     compress_int8,
@@ -50,6 +51,7 @@ __all__ = [
     "BitSchedule",
     "make_bit_schedule",
     "paper_schedule",
+    "schedule_from_formats",
     "compress_int8",
     "decompress_int8",
     "quantized_allreduce_bytes",

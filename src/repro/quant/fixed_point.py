@@ -253,6 +253,21 @@ def make_bit_schedule(
     )
 
 
+def schedule_from_formats(formats, *, enabled: bool = True) -> BitSchedule:
+    """Build a schedule from an explicit per-layer list of (I, F) tuples.
+
+    All three tensor classes (weights, activations, gradients) share the
+    layer's format — the same convention as ``paper_schedule`` / Table I.
+    This is the loading path for searched ``BitPlan`` artifacts.
+    """
+    i = jnp.asarray([int(p[0]) for p in formats], jnp.int32)
+    f = jnp.asarray([int(p[1]) for p in formats], jnp.int32)
+    return BitSchedule(
+        w_i=i, w_f=f, a_i=i, a_f=f, g_i=i, g_f=f,
+        enabled=jnp.float32(1.0 if enabled else 0.0),
+    )
+
+
 def paper_schedule(dataset: str, num_layers: int = 5) -> BitSchedule:
     """The exact per-layer (I,F) design points from Table I of the paper,
     tiled/interpolated if num_layers != 5."""

@@ -1,0 +1,143 @@
+"""Progressive bitwidth annealing: step-indexed F-bit ramps for QAT.
+
+Grammar
+-------
+A schedule is a comma-separated list of ``step:value`` milestones::
+
+    "0:off,100:16,400:12"
+
+* ``step`` — global training step the milestone takes effect (ascending,
+  the first milestone must be step 0).
+* ``value`` — either ``off`` (quantization disabled until the next
+  milestone) or an integer F-bit **floor**: every layer's fractional
+  bits become ``max(schedule_F, value)`` for all three tensor classes.
+
+So the example trains full-precision for 100 steps, then quantized with
+at least 16 fractional bits, and from step 400 on at the underlying
+per-layer schedule (floored at 12).  Ramps descend from wide formats to
+the target schedule — the standard QAT recipe of easing into
+low-precision arithmetic instead of starting there.
+
+Why this composes with everything
+---------------------------------
+``apply`` is pure traced arithmetic on the ``BitSchedule`` pytree and
+the (traced) step counter: bits stay runtime data, so one compiled train
+step serves the entire ramp (no recompiles at milestones), the annealed
+bits flow unchanged through the pipeline/overlap/stochastic-rounding
+paths, and resume from a checkpoint at step N continues the ramp
+bitwise — the effective bits are a pure function of the step, which is
+restored with the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.quant.fixed_point import BitSchedule
+
+# Fractional-bit floors above this would push I+F past the exact-pow2
+# range of the fixed-point emulation (see quant.fixed_point._pow2_int).
+_MAX_F_FLOOR = 24
+
+_OFF = -1  # milestone value meaning "quantization disabled"
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnealSchedule:
+    """Parsed, validated annealing schedule (hashable, jit-friendly)."""
+
+    milestones: Tuple[Tuple[int, int], ...]  # (step, f_floor) with -1 = off
+
+    @classmethod
+    def parse(cls, spec: str) -> "AnnealSchedule":
+        if isinstance(spec, AnnealSchedule):
+            return spec
+        if not isinstance(spec, str) or not spec.strip():
+            raise ValueError(f"empty anneal spec: {spec!r}")
+        milestones = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                step_s, val_s = part.split(":")
+                step = int(step_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad anneal milestone {part!r} (want 'STEP:FBITS' or "
+                    f"'STEP:off') in spec {spec!r}") from None
+            val_s = val_s.strip().lower()
+            if val_s == "off":
+                val = _OFF
+            else:
+                try:
+                    val = int(val_s)
+                except ValueError:
+                    raise ValueError(
+                        f"bad anneal value {val_s!r} in spec {spec!r}") from None
+                if not 0 <= val <= _MAX_F_FLOOR:
+                    raise ValueError(
+                        f"anneal F floor {val} out of range [0, {_MAX_F_FLOOR}]"
+                        f" in spec {spec!r}")
+            if step < 0:
+                raise ValueError(f"negative milestone step in spec {spec!r}")
+            milestones.append((step, val))
+        if not milestones:
+            raise ValueError(f"no milestones in anneal spec {spec!r}")
+        if milestones[0][0] != 0:
+            raise ValueError(
+                f"first anneal milestone must be step 0, got "
+                f"{milestones[0][0]} in spec {spec!r}")
+        steps = [m[0] for m in milestones]
+        if steps != sorted(set(steps)):
+            raise ValueError(f"anneal milestones must strictly ascend: {spec!r}")
+        return cls(milestones=tuple(milestones))
+
+    @property
+    def spec(self) -> str:
+        """Canonical spec string (round-trips through ``parse``)."""
+        return ",".join(
+            f"{s}:{'off' if v == _OFF else v}" for s, v in self.milestones)
+
+    @property
+    def final_step(self) -> int:
+        return self.milestones[-1][0]
+
+    def f_floor_at(self, step: int) -> int:
+        """Static (Python int) lookup — for logging / tests."""
+        val = self.milestones[0][1]
+        for s, v in self.milestones:
+            if step >= s:
+                val = v
+        return val
+
+    def apply(self, bits: BitSchedule, step) -> BitSchedule:
+        """Annealed view of ``bits`` at ``step`` (traced; no recompiles)."""
+        steps = jnp.asarray([m[0] for m in self.milestones], jnp.int32)
+        floors = jnp.asarray(
+            [max(m[1], 0) for m in self.milestones], jnp.int32)
+        on = jnp.asarray(
+            [0.0 if m[1] == _OFF else 1.0 for m in self.milestones],
+            jnp.float32)
+        s = jnp.asarray(step, jnp.int32)
+        idx = jnp.clip(jnp.sum((s >= steps).astype(jnp.int32)) - 1,
+                       0, len(self.milestones) - 1)
+        floor = floors[idx]
+        return dataclasses.replace(
+            bits,
+            w_f=jnp.maximum(bits.w_f, floor),
+            a_f=jnp.maximum(bits.a_f, floor),
+            g_f=jnp.maximum(bits.g_f, floor),
+            enabled=bits.enabled * on[idx],
+        )
+
+    def apply_tree(self, bits, step):
+        """Apply to a dict of schedules (the ``bits`` arg of a train step)."""
+        if isinstance(bits, BitSchedule):
+            return self.apply(bits, step)
+        return {k: self.apply(v, step) for k, v in bits.items()}
+
+    def describe(self) -> str:
+        return f"anneal[{self.spec}]"

@@ -1,0 +1,295 @@
+"""Per-layer (I,F) bitwidth sensitivity sweep via short seeded probes.
+
+The sweep answers the question ROADMAP item 4 poses: *which* per-layer
+format does a model actually need?  For each contiguous layer-group it
+trains short probes over an ascending candidate grid — all other groups
+pinned at a wide safe format — and picks the narrowest candidate whose
+probe loss lands within ``target`` of the f32 baseline.  The assembled
+plan is then probed once end-to-end and escalated (narrowest group
+widened one grid step at a time) until it meets the target too.
+
+Cost model: because every quantizer in ``quant.fixed_point`` takes its
+bitwidths as *traced* data, the whole sweep — baseline, every candidate,
+every escalation round — reuses ONE compiled train step.  A sweep is
+``(groups x grid + 2 + escalations)`` short trainings with a single
+compile, not a recompile per format.
+
+Determinism: probes consume a precomputed batch list from the
+deterministic synthetic dataset, params come from a fixed seed, and
+rounding is round-to-nearest-even — the same ``SweepConfig`` always
+yields the same ``BitPlan`` (drilled in tests/test_bit_search.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lenet5 import CONFIG as LENET
+from repro.core.steps import (StepOptions, default_bits, init_train_state,
+                              make_train_step, num_scan_units)
+from repro.core.taxonn import QuantPolicy, backward_stack, forward_stack
+from repro.data import SyntheticClassificationDataset, SyntheticLMDataset
+from repro.optim import Hyper, OptimizerConfig, apply_update, init_opt_state
+from repro.quant.fixed_point import BitSchedule, schedule_from_formats
+from repro.search.plan import BitPlan, GroupChoice, layer_groups
+
+# Ascending-bitwidth candidate ladder.  Includes sub-int8 points (bitwidth
+# <= 8 exports to serving int8 exactly — see search.export) and the paper's
+# Table-I neighborhood at the wide end.
+DEFAULT_GRID: Tuple[Tuple[int, int], ...] = (
+    (1, 3), (1, 5), (2, 6), (2, 8), (2, 10), (2, 12),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Knobs of a sensitivity sweep."""
+
+    grid: Tuple[Tuple[int, int], ...] = DEFAULT_GRID
+    num_groups: int = 0          # <= 0: one group per layer
+    target: float = 0.08         # allowed probe-loss delta vs f32 baseline
+    probe_steps: int = 120       # train steps per probe
+    batch: int = 128
+    lr: float = 0.05
+    seed: int = 0
+    safe_format: Tuple[int, int] = (4, 16)  # pin for not-under-test groups
+    max_escalations: int = 4
+
+    def sorted_grid(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple(sorted(self.grid, key=lambda p: (p[0] + p[1], p[1])))
+
+
+# ---------------------------------------------------------------------------
+# LeNet-class probe (mirrors benchmarks/convergence.py, engine primitives)
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, d_in, d_h, d_out, n_hidden):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": jax.random.normal(ks[0], (d_in, d_h), jnp.float32) * d_in ** -0.5,
+        "hidden": jax.random.normal(
+            ks[1], (n_hidden, d_h, d_h), jnp.float32) * d_h ** -0.5,
+        "w_out": jax.random.normal(ks[2], (d_h, d_out), jnp.float32) * d_h ** -0.5,
+    }
+
+
+def _make_mlp_step(policy: QuantPolicy, ocfg: OptimizerConfig):
+    def body(w, shared, x, b_l):
+        return jax.nn.relu(x @ w), jnp.float32(0.0)
+
+    def step(params, opt, batch, hyper, bits):
+        x, y = batch
+
+        def in_f(w):
+            return jax.nn.relu(x @ w)
+        h0, in_vjp = jax.vjp(in_f, params["w_in"])
+
+        h_final, caches, _ = forward_stack(body, params["hidden"], (),
+                                           h0, bits, policy)
+
+        def head_f(w, h):
+            logits = h @ w
+            ls = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(ls, y[:, None], 1))
+        loss, head_vjp = jax.vjp(head_f, params["w_out"], h_final)
+        d_wout, G = head_vjp(jnp.float32(policy.grad_scale))
+
+        G0, new_hidden, new_opt_h, _, _ = backward_stack(
+            body, params["hidden"], (), opt["hidden"], caches, bits, G,
+            hyper, policy, ocfg, 0.0)
+
+        (d_win,) = in_vjp(G0)
+        inv = 1.0 / policy.grad_scale
+        new_win, new_opt_in = apply_update(
+            params["w_in"], d_win * inv, opt["w_in"], hyper, ocfg)
+        new_wout, new_opt_out = apply_update(
+            params["w_out"], d_wout * inv, opt["w_out"], hyper, ocfg)
+        return ({"w_in": new_win, "hidden": new_hidden, "w_out": new_wout},
+                {"w_in": new_opt_in, "hidden": new_opt_h,
+                 "w_out": new_opt_out}, loss)
+    return step
+
+
+def make_lenet_probe(sweep: SweepConfig) -> Tuple[Callable[[BitSchedule], float], int]:
+    """Build ``probe(schedule) -> loss`` over the LeNet-class MLP.
+
+    Returns ``(probe, num_layers)``.  The probe closes over one jitted
+    step, one param init and one precomputed batch list, so repeated
+    calls (the whole sweep) share a single compile and are deterministic
+    in the schedule alone.  The probe loss is the mean over the final
+    quarter of steps (smoother than the last step, still end-of-probe).
+    """
+    n_hidden = LENET.num_layers - 2
+    ds = SyntheticClassificationDataset(
+        input_dim=LENET.input_dim, num_classes=LENET.num_classes,
+        n_train=8192, n_test=2048, noise=3.5)
+    batches = [
+        (jnp.asarray(xb), jnp.asarray(yb))
+        for xb, yb in ds.train_batches(sweep.batch, sweep.probe_steps,
+                                       sweep.seed)
+    ]
+    params0 = _init_mlp(jax.random.key(sweep.seed), LENET.input_dim,
+                        LENET.hidden, LENET.num_classes, n_hidden)
+    ocfg = OptimizerConfig(kind="sgd")
+    opt0 = {k: init_opt_state(v, ocfg) for k, v in params0.items()}
+    # One quantize-capable policy for every probe: the f32 baseline is the
+    # same step with ``enabled=0.0`` in the schedule, so nothing recompiles.
+    policy = QuantPolicy(grad_scale=64.0)
+    step = jax.jit(_make_mlp_step(policy, ocfg))
+
+    def probe(schedule: BitSchedule) -> float:
+        params, opt = params0, opt0
+        losses: List[float] = []
+        for i, b in enumerate(batches):
+            hyper = Hyper(lr=jnp.float32(sweep.lr), step=jnp.int32(i))
+            params, opt, loss = step(params, opt, b, hyper, schedule)
+            losses.append(float(loss))
+        tail = max(1, len(losses) // 4)
+        return float(sum(losses[-tail:]) / tail)
+
+    return probe, n_hidden
+
+
+# ---------------------------------------------------------------------------
+# Shared selection loop
+# ---------------------------------------------------------------------------
+
+def select_plan(probe: Callable[[BitSchedule], float], num_layers: int,
+                sweep: SweepConfig,
+                log: Optional[Callable[[str], None]] = None) -> BitPlan:
+    """Greedy per-group selection + whole-plan validation/escalation."""
+    say = log or (lambda s: None)
+    grid = sweep.sorted_grid()
+    groups = layer_groups(num_layers, sweep.num_groups)
+    probes = 0
+
+    baseline = probe(schedule_from_formats(
+        [sweep.safe_format] * num_layers, enabled=False))
+    probes += 1
+    say(f"baseline loss {baseline:.4f} (target +{sweep.target:.3f})")
+
+    # chosen[g] = index into grid for group g
+    chosen: List[int] = []
+    records: List[GroupChoice] = []
+    for g, layers in enumerate(groups):
+        pick, pick_loss, met = len(grid) - 1, float("inf"), False
+        for ci, (i_b, f_b) in enumerate(grid):
+            fmts = [sweep.safe_format] * num_layers
+            for layer in layers:
+                fmts[layer] = (i_b, f_b)
+            loss = probe(schedule_from_formats(fmts))
+            probes += 1
+            say(f"  group {g} {layers} ({i_b},{f_b}) -> {loss:.4f}")
+            if loss <= baseline + sweep.target:
+                pick, pick_loss, met = ci, loss, True
+                break
+            pick, pick_loss = ci, loss  # fall through to widest
+        records.append(GroupChoice(
+            group=g, layers=layers, i_bits=grid[pick][0],
+            f_bits=grid[pick][1], probe_loss=pick_loss, met_target=met))
+        chosen.append(pick)
+
+    def assembled(idx: List[int]):
+        fmts = [None] * num_layers
+        for g, layers in enumerate(groups):
+            for layer in layers:
+                fmts[layer] = grid[idx[g]]
+        return fmts
+
+    final = probe(schedule_from_formats(assembled(chosen)))
+    probes += 1
+    say(f"assembled plan loss {final:.4f}")
+
+    # Per-group probes can interact; escalate the narrowest group until
+    # the assembled plan itself meets the target (or nothing can widen).
+    for _ in range(sweep.max_escalations):
+        if final <= baseline + sweep.target:
+            break
+        widenable = [g for g in range(len(groups))
+                     if chosen[g] < len(grid) - 1]
+        if not widenable:
+            break
+        g = min(widenable,
+                key=lambda k: (sum(grid[chosen[k]]), -records[k].probe_loss))
+        chosen[g] += 1
+        say(f"  escalate group {g} -> {grid[chosen[g]]}")
+        final = probe(schedule_from_formats(assembled(chosen)))
+        probes += 1
+        say(f"  plan loss {final:.4f}")
+
+    groups_out = tuple(
+        dataclasses.replace(records[g], i_bits=grid[chosen[g]][0],
+                            f_bits=grid[chosen[g]][1])
+        for g in range(len(groups)))
+    return BitPlan(
+        num_layers=num_layers, groups=groups_out, baseline_loss=baseline,
+        final_loss=final, target=sweep.target, seed=sweep.seed, grid=grid,
+        probe_steps=sweep.probe_steps, probes=probes)
+
+
+def run_sweep(sweep: SweepConfig = SweepConfig(),
+              log: Optional[Callable[[str], None]] = None) -> BitPlan:
+    """Full sensitivity sweep on the LeNet-class config (the paper's
+    workload; used by benchmarks/bitwidth.py and the conformance tests)."""
+    probe, n_hidden = make_lenet_probe(sweep)
+    return select_plan(probe, n_hidden, sweep, log=log)
+
+
+# ---------------------------------------------------------------------------
+# Sweep over a full transformer config (the --bit-search driver path)
+# ---------------------------------------------------------------------------
+
+def run_sweep_lm(cfg, ocfg: Optional[OptimizerConfig] = None,
+                 sweep: SweepConfig = SweepConfig(), *, seq_len: int = 64,
+                 grad_scale: float = 64.0,
+                 log: Optional[Callable[[str], None]] = None) -> BitPlan:
+    """Sensitivity sweep over the main block stack of a real model config.
+
+    Probes run through ``make_train_step`` (the TaxoNN engine) with the
+    candidate schedule installed on ``bits['blocks']``; any encoder stack
+    keeps its default schedule.  Same single-compile property as the
+    LeNet sweep: bitwidths are traced data.
+    """
+    from repro.models import lm
+
+    ocfg = ocfg or OptimizerConfig(kind="sgd")
+    policy = QuantPolicy(grad_scale=grad_scale)
+    step = jax.jit(make_train_step(cfg, policy, ocfg, StepOptions()))
+    n = num_scan_units(cfg)
+    base_bits = default_bits(cfg, enabled=True)
+
+    ds = SyntheticLMDataset(cfg.vocab_size, seq_len, sweep.batch,
+                            seed=sweep.seed)
+    batches = []
+    for i in range(sweep.probe_steps):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        bsz = b["tokens"].shape[0]
+        if cfg.family == "encdec":
+            b["frames"] = jax.random.normal(
+                jax.random.fold_in(jax.random.key(2), i),
+                (bsz, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            b["patch_embeds"] = jax.random.normal(
+                jax.random.fold_in(jax.random.key(3), i),
+                (bsz, cfg.num_patches, cfg.d_model), jnp.float32)
+        batches.append(b)
+
+    params0 = lm.init_params(jax.random.key(sweep.seed), cfg)
+    opt0 = init_train_state(params0, ocfg)
+
+    def probe(schedule: BitSchedule) -> float:
+        bits = dict(base_bits)
+        bits["blocks"] = schedule
+        params, opt = params0, opt0
+        losses: List[float] = []
+        for i, b in enumerate(batches):
+            hyper = Hyper(lr=jnp.float32(sweep.lr), step=jnp.int32(i))
+            params, opt, metrics = step(params, opt, b, hyper, bits)
+            losses.append(float(metrics["loss"]))
+        tail = max(1, len(losses) // 4)
+        return float(sum(losses[-tail:]) / tail)
+
+    return select_plan(probe, n, sweep, log=log)

@@ -255,13 +255,23 @@ def constrain_pool(pool: dict) -> dict:
             for k, x in pool.items()}
 
 
-def _quant_rows(x: Array):
-    """Per-token int8 absmax: x [R, H, D] -> (int8 [R, H, D], scale [R])."""
+def quant_kv_rows(x: Array):
+    """Per-token int8 absmax: x [R, H, D] -> (int8 [R, H, D], scale [R]).
+
+    This IS the serving KV quantization spec: scale = max(|row|, 1e-8)/127,
+    payload = clip(round(x/scale), -127, 127).  ``search.export`` restates
+    the same rule and the conformance suite (tests/test_bit_search.py)
+    holds the two bit-for-bit equal, so a trained ``BitPlan`` exported to
+    int8 serving sees exactly these numerics.
+    """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 2))
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None, None]),
                  -127, 127).astype(jnp.int8)
     return q, scale
+
+
+_quant_rows = quant_kv_rows  # internal alias (pre-export-path name)
 
 
 def _pool_update(pool_l: dict, k: Array, v: Array, tables: Array,

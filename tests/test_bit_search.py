@@ -1,0 +1,308 @@
+"""Conformance suite for the bitwidth search subsystem (ISSUE 10).
+
+Four contracts:
+
+  * **sweep determinism** — the same ``SweepConfig`` always selects the
+    same ``BitPlan`` (probes are seeded, rounding is RNE, selection is
+    pure Python);
+  * **monotonicity** — widening (I,F) never raises the probe loss beyond
+    tolerance (the property that makes greedy narrowest-first selection
+    sound);
+  * **anneal** — a step built with ``bit_anneal`` equals a step fed
+    manually-annealed bits bitwise at every milestone, and a checkpoint
+    written mid-ramp resumes bitwise-identically (the ramp is a pure
+    function of the restored step);
+  * **export parity** — a plan's serving-side int8 numerics (grid
+    embedding, KV cache rule, decode prologue) match train-time
+    quantization bit-for-bit.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import restore_checkpoint, save_checkpoint
+from repro.core.steps import (StepOptions, apply_resume_extra,
+                              capture_resume_extra, default_bits,
+                              init_train_state, make_train_step)
+from repro.core.taxonn import QuantPolicy
+from repro.models import lm
+from repro.optim import Hyper, OptimizerConfig
+from repro.quant import schedule_from_formats
+from repro.search import AnnealSchedule, BitPlan
+from repro.search import export as bit_export
+from repro.search.plan import layer_groups, plan_from_formats
+from repro.search.sensitivity import SweepConfig, make_lenet_probe, run_sweep
+from test_models import make_batch, tiny
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+QUICK_SWEEP = SweepConfig(num_groups=2, probe_steps=40, target=0.15,
+                          grid=((1, 3), (1, 5), (2, 6), (2, 10)))
+
+
+# ---------------------------------------------------------------------------
+# Sensitivity sweep
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quick_plan():
+    return run_sweep(QUICK_SWEEP)
+
+
+def test_sweep_deterministic_under_fixed_seed(quick_plan):
+    again = run_sweep(QUICK_SWEEP)
+    assert again.to_json() == quick_plan.to_json()
+
+
+def test_sweep_meets_loss_target(quick_plan):
+    # the acceptance criterion: the selected plan's end-to-end probe loss
+    # lands within the configured target of the f32 baseline
+    assert quick_plan.met_target
+    assert quick_plan.final_loss <= quick_plan.baseline_loss + \
+        quick_plan.target
+    assert quick_plan.num_layers == 3  # LeNet hidden stack
+    covered = sorted(l for g in quick_plan.groups for l in g.layers)
+    assert covered == list(range(quick_plan.num_layers))
+
+
+def test_sweep_plan_json_roundtrip(quick_plan, tmp_path):
+    path = str(tmp_path / "plan.json")
+    quick_plan.save(path)
+    loaded = BitPlan.load(path)
+    assert loaded.to_json() == quick_plan.to_json()
+    assert loaded.formats() == quick_plan.formats()
+
+
+def test_probe_loss_monotone_in_bitwidth():
+    """Wider (I,F) never raises the probe loss beyond tolerance."""
+    sweep = dataclasses.replace(QUICK_SWEEP, probe_steps=60)
+    probe, n = make_lenet_probe(sweep)
+    losses = {
+        fmt: probe(schedule_from_formats([fmt] * n))
+        for fmt in ((1, 3), (2, 6), (2, 12))
+    }
+    baseline = probe(schedule_from_formats([(2, 12)] * n, enabled=False))
+    tol = 0.05
+    assert losses[(2, 6)] <= losses[(1, 3)] + tol
+    assert losses[(2, 12)] <= losses[(2, 6)] + tol
+    # and the wide end of the grid behaves like full precision
+    assert losses[(2, 12)] <= baseline + tol
+
+
+def test_layer_groups_partition():
+    assert layer_groups(5, 2) == ((0, 1), (2, 3, 4))
+    assert layer_groups(3, 0) == ((0,), (1,), (2,))
+    assert layer_groups(4, 7) == ((0,), (1,), (2,), (3,))
+    with pytest.raises(ValueError):
+        layer_groups(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Anneal schedules
+# ---------------------------------------------------------------------------
+
+def test_anneal_parse_grammar():
+    a = AnnealSchedule.parse("0:off, 100:16,400:12")
+    assert a.spec == "0:off,100:16,400:12"
+    assert a.f_floor_at(0) == -1 and a.f_floor_at(99) == -1
+    assert a.f_floor_at(100) == 16 and a.f_floor_at(400) == 12
+    assert a.final_step == 400
+    assert AnnealSchedule.parse(a) is a  # idempotent
+
+    for bad in ("", "5:12", "0:12,0:10", "0:xyz", "0:12,100:-3", "0:99"):
+        with pytest.raises(ValueError):
+            AnnealSchedule.parse(bad)
+
+
+def test_anneal_apply_floors_and_off():
+    a = AnnealSchedule.parse("0:off,3:16,7:12")
+    sched = schedule_from_formats([(2, 6), (2, 8), (2, 14)])
+    off = a.apply(sched, jnp.int32(1))
+    assert float(off.enabled) == 0.0
+    mid = a.apply(sched, jnp.int32(3))
+    assert mid.w_f.tolist() == [16, 16, 16] and float(mid.enabled) == 1.0
+    end = a.apply(sched, jnp.int32(50))
+    # the floor never NARROWS a layer below its own schedule
+    assert end.w_f.tolist() == [12, 12, 14]
+    assert end.a_f.tolist() == [12, 12, 14]
+    assert end.g_f.tolist() == [12, 12, 14]
+    # I bits and the underlying schedule are untouched
+    np.testing.assert_array_equal(np.asarray(end.w_i), np.asarray(sched.w_i))
+    np.testing.assert_array_equal(np.asarray(sched.w_f),
+                                  np.asarray([6, 8, 14]))
+
+
+def test_step_options_normalizes_anneal_spec():
+    opts = StepOptions(bit_anneal="0:16,10:12")
+    assert isinstance(opts.bit_anneal, AnnealSchedule)
+    assert opts.bit_anneal.spec == "0:16,10:12"
+    with pytest.raises(ValueError):
+        StepOptions(bit_anneal=123)
+    pol = QuantPolicy(bit_anneal="0:16,10:12")
+    assert StepOptions.from_policy(pol).bit_anneal.spec == "0:16,10:12"
+
+
+def _train(step_fn, params, opt, batches, bits, *, start=0, rng_base=None):
+    for i, batch in enumerate(batches[start:], start=start):
+        hyper = Hyper(lr=jnp.float32(0.05), step=jnp.int32(i))
+        rng = (jax.random.fold_in(rng_base, i)
+               if rng_base is not None else None)
+        params, opt, _ = step_fn(params, opt, batch, hyper, bits, rng)
+    return params, opt
+
+
+def test_anneal_step_matches_manual_bits_bitwise():
+    """A step built with bit_anneal == the same step fed manually-annealed
+    bits, at every milestone — so the ramp composes with the engine (scan,
+    stochastic rounding, kernel paths) with no special cases."""
+    spec = "0:off,2:14,5:10"
+    cfg = tiny("dense")
+    policy = QuantPolicy(grad_scale=8.0)
+    ocfg = OptimizerConfig(kind="sgd")
+    annealed = jax.jit(make_train_step(
+        cfg, policy, ocfg, StepOptions(bit_anneal=spec)))
+    manual = jax.jit(make_train_step(cfg, policy, ocfg, StepOptions()))
+    assert annealed.bit_anneal.spec == spec
+
+    sched = AnnealSchedule.parse(spec)
+    bits = default_bits(cfg, enabled=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    opt = init_train_state(params, ocfg)
+    batch = make_batch(cfg, b=2, t=16)
+    for step in (0, 1, 2, 4, 5, 9):
+        hyper = Hyper(lr=jnp.float32(0.05), step=jnp.int32(step))
+        pa, oa, ma = annealed(params, opt, batch, hyper, bits)
+        pm, om, mm = manual(params, opt, batch, hyper,
+                            sched.apply_tree(bits, step))
+        for a, m in zip(jax.tree.leaves((pa, oa)), jax.tree.leaves((pm, om))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(m))
+        np.testing.assert_array_equal(np.asarray(ma["loss"]),
+                                      np.asarray(mm["loss"]))
+
+
+def test_anneal_resume_bitwise_mid_ramp(tmp_path):
+    """Checkpoint in the middle of the F-bit ramp, restart, and the
+    continuation is bitwise identical to the uninterrupted run — annealed
+    bits are a pure function of the (restored) step."""
+    spec = "0:14,3:12,7:10"
+    cfg = tiny("dense")
+    policy = QuantPolicy(grad_scale=8.0, stochastic=True)
+    ocfg = OptimizerConfig(kind="sgd")
+    step_fn = jax.jit(make_train_step(
+        cfg, policy, ocfg, StepOptions(bit_anneal=spec)))
+    bits = default_bits(cfg, enabled=True)
+    batches = [make_batch(cfg, b=2, t=16, key=i) for i in range(10)]
+    rng_base = jax.random.key(7)
+
+    params0 = lm.init_params(jax.random.key(0), cfg)
+    opt0 = init_train_state(params0, ocfg)
+
+    # uninterrupted: 10 steps straight through the 3->7 milestones
+    p_full, o_full = _train(step_fn, params0, opt0, batches, bits,
+                            rng_base=rng_base)
+
+    # interrupted: stop at step 5 (mid-ramp), checkpoint, restore, continue
+    p_half, o_half = _train(step_fn, params0, opt0, batches[:5], bits,
+                            rng_base=rng_base)
+    ckpt_dir = str(tmp_path / "ckpt")
+    extra = capture_resume_extra(cfg, 5, anneal=spec)
+    assert extra["bit_anneal"] == spec
+    save_checkpoint(ckpt_dir, 5, (p_half, o_half), extra=extra)
+    (p_res, o_res), ckpt_step, extra_r = restore_checkpoint(
+        ckpt_dir, (p_half, o_half))
+    start = apply_resume_extra(extra_r, cfg, ckpt_step, anneal=spec)
+    assert start == 5
+    p_resumed, o_resumed = _train(step_fn, p_res, o_res, batches, bits,
+                                  start=start, rng_base=rng_base)
+
+    for a, b in zip(jax.tree.leaves((p_full, o_full)),
+                    jax.tree.leaves((p_resumed, o_resumed))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_anneal_resume_guard():
+    cfg = tiny("dense")
+    extra = capture_resume_extra(cfg, 5, anneal="0:14,3:12")
+    # same spec: fine
+    assert apply_resume_extra(extra, cfg, 5, anneal="0:14,3:12") == 5
+    # different ramp: refuse (the bit schedule would jump mid-run)
+    with pytest.raises(ValueError, match="annealed under"):
+        apply_resume_extra(extra, cfg, 5, anneal="0:16,3:12")
+    # dropping the anneal at resume: loud warning, not silent drift
+    with pytest.warns(RuntimeWarning, match="bit-anneal mismatch"):
+        apply_resume_extra(extra, cfg, 5)
+    # plain checkpoints resumed plainly stay silent
+    plain = capture_resume_extra(cfg, 5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert apply_resume_extra(plain, cfg, 5) == 5
+
+
+# ---------------------------------------------------------------------------
+# Export path: train <-> serve int8 parity
+# ---------------------------------------------------------------------------
+
+EXPORT_PLAN = plan_from_formats([(2, 5), (1, 6), (2, 12), (4, 10)])
+
+
+def test_export_parity_bit_for_bit():
+    res = bit_export.verify_train_serve_parity(EXPORT_PLAN)
+    assert res["ok"], res
+    assert res["grid_msb_max_diff"] == 0.0
+    assert res["grid_exact_max_diff"] == 0.0
+    assert res["kv_payload_max_diff"] == 0
+    assert res["kv_scale_max_diff"] == 0.0
+    assert res["prologue_max_diff"] == 0.0
+
+
+def test_export_grid_embedding_exact_below_int8():
+    """bitwidth <= 8 formats embed exactly: serve-side dequantization is
+    the identity on train-quantized tensors."""
+    from repro.quant import dequantize_int8, quantize, quantize_int8_fxp
+
+    i_b, f_b = 2, 5  # bitwidth 8
+    x = jax.random.uniform(jax.random.key(3), (1024,), jnp.float32, -6.0, 6.0)
+    x_q = quantize(x, i_b, f_b)
+    payload, scale = quantize_int8_fxp(x_q, i_b, f_b)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8(payload, scale)), np.asarray(x_q))
+
+
+def test_export_kv_rule_matches_engine():
+    from repro.serving import engine
+
+    x = 3.0 * jax.random.normal(jax.random.key(4), (32, 4, 16), jnp.float32)
+    q_eng, s_eng = engine.quant_kv_rows(x)
+    q_exp, s_exp = bit_export.kv_reference(x)
+    assert q_eng.dtype == jnp.int8 and q_exp.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q_eng), np.asarray(q_exp))
+    np.testing.assert_array_equal(np.asarray(s_eng), np.asarray(s_exp))
+
+
+def test_serve_plan_rendering_and_roundtrip(tmp_path):
+    sp = bit_export.to_serve_plan(EXPORT_PLAN)
+    by_layer = {l.layer: l for l in sp.layers}
+    assert by_layer[0].mode == "fxp" and by_layer[0].exact       # (2,5) -> bw 8
+    assert by_layer[1].mode == "fxp" and by_layer[1].exact       # (1,6) -> bw 8
+    assert by_layer[2].mode == "absmax" and by_layer[2].shift == 7  # (2,12)
+    assert by_layer[2].eff_f_bits == 5
+    assert sp.serve_config_kwargs() == {"cache_dtype": jnp.int8}
+
+    path = str(tmp_path / "serve.json")
+    bit_export.save_serve_plan(sp, path)
+    assert bit_export.load_serve_plan(path).to_json() == sp.to_json()
+
+    # I > 7 cannot keep its MSBs in int8
+    with pytest.raises(ValueError, match="I > 7"):
+        bit_export.to_serve_plan(plan_from_formats([(8, 4)]))
+
+
+def test_sweep_plan_exports_with_parity(quick_plan):
+    """End to end: the searched plan itself exports and passes parity."""
+    sp = bit_export.to_serve_plan(quick_plan)
+    assert len(sp.layers) == quick_plan.num_layers
+    bit_export.assert_parity(quick_plan)
